@@ -1,0 +1,219 @@
+"""Benchmark harness — one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows (derived = the
+figure's own metric, e.g. TAOs/s for Fig 6).
+
+  fig4   — kernel profiling (paper Fig 4): throughput vs (chains x width x
+           core class) on the calibrated simulator, plus real Pallas-kernel
+           wall-times on this host (oracle path).
+  fig6   — randomized DAGs (paper Fig 6): 3 parallelism degrees x all
+           scheduling policies, width hints 1 and 4.
+  tab1/2 — task-molding impact (paper Tables 1 and 2).
+  serve  — serving orchestrator (beyond-paper: prefill/decode placement).
+  train  — training-DAG orchestrator at fleet scale.
+  roofline — per (arch x shape) roofline terms from the dry-run artifacts
+             (see EXPERIMENTS.md §Roofline; requires experiments/dryrun/).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: kernel profiling
+# ---------------------------------------------------------------------------
+def fig4_kernel_profile() -> None:
+    from repro.core import (BIG, LITTLE, Simulator, TaoDag, chain, hikey960,
+                            make_policy)
+
+    spec = hikey960()
+
+    def profile(kernel: str, n_chains: int, width: int, cluster: str):
+        sim = Simulator(spec, make_policy("homogeneous"), seed=0)
+        dead = spec.little_workers if cluster == BIG else spec.big_workers
+        for w in dead:
+            sim.fail_worker(w)
+        dag = TaoDag()
+        for _ in range(n_chains):
+            chain(dag, kernel, 40, width_hint=width)
+        res = sim.run(dag)
+        emit(f"fig4.{kernel}.{n_chains}x{width}.{cluster}",
+             res.makespan / res.completed * 1e6,
+             f"{res.throughput:.1f}")
+
+    for kernel in ("matmul", "sort", "copy"):
+        for n_chains, width in ((1, 1), (1, 2), (1, 4), (2, 1), (4, 1),
+                                (2, 2)):
+            for cluster in (BIG, LITTLE):
+                profile(kernel, n_chains, width, cluster)
+
+
+def fig4_real_kernels() -> None:
+    """Real kernel wall-times on this host (XLA oracle path, CPU)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops
+
+    r = np.random.default_rng(0)
+
+    def bench(name, fn, *args, iters=20):
+        fn(*args).block_until_ready()          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        out.block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        emit(f"fig4.real.{name}", us, "host_cpu")
+
+    a = jnp.asarray(r.standard_normal((512, 512)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((512, 512)), jnp.float32)
+    bench("matmul_512", lambda x, y: ops.matmul(x, y, force="ref"), a, b)
+    big = jnp.asarray(r.standard_normal((4096, 512)), jnp.float32)
+    bench("copy_8MB", lambda x: ops.copy(x, force="ref"), big)
+    s = jnp.asarray(r.standard_normal((64, 1024)), jnp.float32)
+    bench("sort_64x1024", lambda x: ops.sort_rows(x, force="ref"), s)
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: randomized DAGs
+# ---------------------------------------------------------------------------
+FIG6_POLICIES = ("homogeneous", "crit-aware", "crit-ptt", "weight",
+                 "molding:crit-ptt", "molding:weight")
+
+
+def fig6_random_dags(n_tasks: int = 3000) -> None:
+    from repro.core import Simulator, hikey960, make_policy, random_dag
+
+    spec = hikey960()
+    for degree in (1.62, 3.03, 8.06):
+        for hint in (1, 4):
+            for policy in FIG6_POLICIES:
+                dag = random_dag(n_tasks, target_degree=degree,
+                                 seed=int(degree * 100), width_hint=hint)
+                sim = Simulator(spec, make_policy(policy), seed=1)
+                res = sim.run(dag)
+                emit(f"fig6.deg{degree}.hint{hint}.{policy}",
+                     res.makespan / res.completed * 1e6,
+                     f"{res.throughput:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Tables 1-2: molding impact
+# ---------------------------------------------------------------------------
+def tables_molding(n_tasks: int = 3000) -> None:
+    from repro.core import Simulator, hikey960, make_policy, random_dag
+
+    spec = hikey960()
+    # paper: hints = best-for-base-case (4 for low degrees, 1 for 8.06)
+    cases = ((1.62, 4), (3.03, 4), (8.06, 1))
+    for tab, base_pol in (("tab1", "weight"), ("tab2", "crit-ptt")):
+        for degree, hint in cases:
+            for molding in (False, True):
+                pol = f"molding:{base_pol}" if molding else base_pol
+                dag = random_dag(n_tasks, target_degree=degree,
+                                 seed=int(degree * 100), width_hint=hint)
+                res = Simulator(spec, make_policy(pol), seed=2).run(dag)
+                tag = "with_molding" if molding else "without_molding"
+                emit(f"{tab}.deg{degree}.hint{hint}.{tag}",
+                     res.makespan / res.completed * 1e6,
+                     f"{res.throughput:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: serving + training orchestrators
+# ---------------------------------------------------------------------------
+def serve_bench() -> None:
+    import random as _r
+    from repro.core import fleet, hikey960, make_policy
+    from repro.core.serve_orchestrator import ServeRequest, simulate_serving
+
+    rng = _r.Random(0)
+    reqs = [ServeRequest(i, rng.choice([512, 2048, 8192]),
+                         rng.choice([64, 128, 256])) for i in range(200)]
+    for spec_name, spec in (("hikey", hikey960()), ("fleet64", fleet(32, 32))):
+        for pol in ("homogeneous", "weight", "molding:weight"):
+            st = simulate_serving(reqs, spec, make_policy(pol), seed=0)
+            emit(f"serve.{spec_name}.{pol}",
+                 st.mean_latency * 1e6,
+                 f"{st.tokens_per_s:.0f}tok/s;p99={st.p99_latency:.3f}s")
+
+
+def train_bench() -> None:
+    from repro.core import fleet, make_policy
+    from repro.core.train_orchestrator import simulate_training
+
+    for n_groups, mb in ((64, 32), (512, 256), (1024, 512)):
+        spec = fleet(n_groups * 3 // 4, n_groups // 4)
+        for pol in ("homogeneous", "molding:crit-ptt"):
+            res = simulate_training(n_steps=5, n_microbatches=mb, spec=spec,
+                                    policy=make_policy(pol), seed=0)
+            emit(f"train.groups{n_groups}.mb{mb}.{pol}",
+                 res.makespan / 5 * 1e6,
+                 f"{res.throughput:.0f}taos/s;util={res.utilization:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# roofline (from dry-run artifacts)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e-class, per the brief)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+
+def roofline(dryrun_dir: str = "experiments/dryrun/single_pod") -> None:
+    d = pathlib.Path(dryrun_dir)
+    if not d.exists():
+        print(f"# roofline: {d} missing (run repro.launch.dryrun first)",
+              flush=True)
+        return
+    for path in sorted(d.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("status") != "ok":
+            continue
+        # per-device quantities (cost analysis of the SPMD module)
+        t_comp = rec["flops"] / PEAK_FLOPS
+        t_mem = rec["bytes_accessed"] / HBM_BW
+        coll = rec.get("collectives", {})
+        coll_bytes = sum(v for k, v in coll.items() if k != "count")
+        t_coll = coll_bytes / ICI_BW
+        dom = max((t_comp, "compute"), (t_mem, "memory"),
+                  (t_coll, "collective"))[1]
+        emit(f"roofline.{rec['arch']}.{rec['shape']}",
+             max(t_comp, t_mem, t_coll) * 1e6,
+             f"comp={t_comp:.4f}s;mem={t_mem:.4f}s;coll={t_coll:.4f}s;"
+             f"bound={dom}")
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if which in ("all", "fig4"):
+        fig4_kernel_profile()
+        fig4_real_kernels()
+    if which in ("all", "fig6"):
+        fig6_random_dags()
+    if which in ("all", "tab"):
+        tables_molding()
+    if which in ("all", "serve"):
+        serve_bench()
+    if which in ("all", "train"):
+        train_bench()
+    if which in ("all", "roofline"):
+        roofline()
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

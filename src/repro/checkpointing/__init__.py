@@ -1,0 +1,4 @@
+"""repro.checkpointing — sharded save/restore with async writer + manifest."""
+from .checkpoint import (CheckpointManager, load_checkpoint, save_checkpoint)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

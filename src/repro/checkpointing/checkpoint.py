@@ -1,0 +1,170 @@
+"""Fault-tolerant checkpointing (no orbax dependency — pure numpy + JSON).
+
+Layout of one checkpoint::
+
+    <dir>/step_000100/
+        MANIFEST.json      # pytree structure, shapes, dtypes, status=COMPLETE
+        leaf_00000.npy     # one file per pytree leaf
+        ...
+
+Restart protocol: ``CheckpointManager.latest()`` scans for the highest step
+whose manifest says COMPLETE — a half-written checkpoint (node died mid-save)
+is ignored, giving at-most-one-step rollback.  Saves can run on a background
+thread (``async_save``) so the training loop never blocks on disk; the
+manager joins the writer before starting the next save (single-writer rule).
+
+On a real multi-host fleet each host writes only the leaves it owns (via
+``jax.experimental.multihost_utils``); here (single host) the full tree is
+written, but the manifest format already records per-leaf shape/dtype so the
+restore path is host-count independent.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+import jax
+
+
+def _flatten_with_paths(tree: Any):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = ["/".join(str(p) for p in kp) for kp, _ in leaves_with_paths]
+    leaves = [l for _, l in leaves_with_paths]
+    return paths, leaves
+
+
+def save_checkpoint(directory: str | pathlib.Path, step: int, tree: Any) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    paths, leaves = _flatten_with_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "status": "WRITING",
+        "treedef": str(treedef),
+        "leaves": [],
+        "written_at": time.time(),
+    }
+    for i, (path, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":     # numpy can't serialize ml_dtypes
+            np.save(tmp / f"leaf_{i:05d}.npy", arr.view(np.uint16))
+        else:
+            np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        manifest["leaves"].append(
+            {"index": i, "path": path, "shape": list(arr.shape),
+             "dtype": dtype_name})
+    manifest["status"] = "COMPLETE"
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    return final
+
+
+def load_checkpoint(directory: str | pathlib.Path, step: int,
+                    like: Any) -> Any:
+    """Restore into the structure (and shardings) of ``like``."""
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+    if manifest["status"] != "COMPLETE":
+        raise ValueError(f"checkpoint at {d} is incomplete")
+    leaves = []
+    for e in manifest["leaves"]:
+        raw = np.load(d / f"leaf_{e['index']:05d}.npy")
+        if e["dtype"] == "bfloat16":
+            import ml_dtypes
+            raw = raw.view(ml_dtypes.bfloat16)
+        leaves.append(raw)
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(like_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template has "
+            f"{len(like_leaves)}")
+    out = []
+    for tmpl, arr in zip(like_leaves, leaves):
+        if tuple(tmpl.shape) != tuple(arr.shape):
+            raise ValueError(f"shape mismatch {tmpl.shape} vs {arr.shape}")
+        sharding = getattr(tmpl, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            out.append(jax.device_put(arr.astype(tmpl.dtype), sharding))
+        else:
+            out.append(jax.numpy.asarray(arr, tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Rolling checkpoints with async save and restart discovery."""
+
+    STEP_RE = re.compile(r"step_(\d+)$")
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._writer: threading.Thread | None = None
+
+    # -- discovery -----------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.directory.iterdir():
+            m = self.STEP_RE.search(p.name)
+            if not m:
+                continue
+            try:
+                manifest = json.loads((p / "MANIFEST.json").read_text())
+            except (FileNotFoundError, json.JSONDecodeError):
+                continue
+            if manifest.get("status") == "COMPLETE":
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- saving ----------------------------------------------------------------
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        save_checkpoint(self.directory, step, tree)
+        self._gc()
+
+    def async_save(self, step: int, tree: Any) -> None:
+        """Snapshot to host memory synchronously, write to disk on a thread."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        self._writer = threading.Thread(target=_write, daemon=True)
+        self._writer.start()
+
+    def restore(self, like: Any, step: int | None = None) -> tuple[int, Any]:
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.directory}")
+        return step, load_checkpoint(self.directory, step, like)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: heterogeneous mixed-mode DAG
+scheduling with a Performance Trace Table, criticality / weight-based
+placement and task molding (Rohlin, Fahlgren, Pericàs — HIP3ES 2019)."""
+from .dag import TAO, TaoDag, chain
+from .dag_gen import KERNEL_TYPES, paper_dags, random_dag
+from .places import (BIG, LITTLE, ClusterSpec, fleet, hikey960, homogeneous,
+                     leader_of, place_members, valid_widths)
+from .policies import (ALL_POLICY_NAMES, CriticalityAwarePolicy,
+                       CriticalityPTTPolicy, HomogeneousPolicy, MoldingPolicy,
+                       Placement, Policy, WeightBasedPolicy, make_policy)
+from .ptt import PTT, PTTRegistry
+from .runtime import ChunkedWork, ThreadedRuntime
+from .scheduler import SchedulerCore
+from .simulator import (KernelModel, SimResult, Simulator,
+                        paper_kernel_models, run_policy)
+
+__all__ = [
+    "TAO", "TaoDag", "chain", "KERNEL_TYPES", "paper_dags", "random_dag",
+    "BIG", "LITTLE", "ClusterSpec", "fleet", "hikey960", "homogeneous",
+    "leader_of", "place_members", "valid_widths",
+    "ALL_POLICY_NAMES", "CriticalityAwarePolicy", "CriticalityPTTPolicy",
+    "HomogeneousPolicy", "MoldingPolicy", "Placement", "Policy",
+    "WeightBasedPolicy", "make_policy", "PTT", "PTTRegistry",
+    "ChunkedWork", "ThreadedRuntime", "SchedulerCore",
+    "KernelModel", "SimResult", "Simulator", "paper_kernel_models", "run_policy",
+]

@@ -1,0 +1,154 @@
+"""TAO-DAG: mixed-mode task graphs and the criticality pre-pass.
+
+A TAO (Task Assembly Object) is a *moldable* parallel node of the global DAG:
+the runtime may execute it on an elastic place of any valid width.  ``work``
+is deliberately abstract — the threaded runtime binds it to real (jitted JAX)
+chunk functions, the simulator binds it to a cost model, and the LM
+orchestrators bind it to pjit'd train/serve steps on mesh slices.
+
+Criticality (paper §3.2.1): a recursive top-down pass assigns
+``crit(n) = 1 + max(crit(children))`` so the first node of the longest path
+carries the highest value.  We implement it iteratively (reverse topological
+order) — the paper's DAGs have 3000 nodes and the fleet DAGs far more, so
+Python recursion is not an option.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Callable, Iterable, Sequence
+
+
+@dataclasses.dataclass
+class TAO:
+    """One moldable node of the TAO-DAG."""
+
+    type: str
+    work: Any = None          # runtime-specific payload (chunks / cost key / step fn)
+    width_hint: int = 1       # programmer resource hint (molding may override)
+    id: int = -1
+    criticality: int = 0
+    # wiring (filled by TaoDag.add / add_edge)
+    children: list["TAO"] = dataclasses.field(default_factory=list)
+    parents: list["TAO"] = dataclasses.field(default_factory=list)
+    # execution bookkeeping
+    pending: int = 0          # unfinished parents (runtime decrements)
+    assigned_width: int = 0   # width chosen at wake-up (0 = not yet scheduled)
+    assigned_leader: int = -1
+
+    def __hash__(self) -> int:  # identity hash: TAOs are unique nodes
+        return id(self)
+
+    def __eq__(self, other: object) -> bool:
+        return self is other
+
+    def __repr__(self) -> str:
+        return (f"TAO(id={self.id}, type={self.type!r}, hint={self.width_hint}, "
+                f"crit={self.criticality})")
+
+
+class TaoDag:
+    """A mixed-mode task DAG with criticality assignment."""
+
+    def __init__(self) -> None:
+        self.nodes: list[TAO] = []
+        self._ids = itertools.count()
+
+    # -- construction -------------------------------------------------------
+    def add(self, tao: TAO) -> TAO:
+        tao.id = next(self._ids)
+        self.nodes.append(tao)
+        return tao
+
+    def add_task(self, type: str, work: Any = None, width_hint: int = 1,
+                 deps: Sequence[TAO] = ()) -> TAO:
+        tao = self.add(TAO(type=type, work=work, width_hint=width_hint))
+        for d in deps:
+            self.add_edge(d, tao)
+        return tao
+
+    def add_edge(self, src: TAO, dst: TAO) -> None:
+        src.children.append(dst)
+        dst.parents.append(src)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    # -- structural queries ---------------------------------------------------
+    def roots(self) -> list[TAO]:
+        return [n for n in self.nodes if not n.parents]
+
+    def sinks(self) -> list[TAO]:
+        return [n for n in self.nodes if not n.children]
+
+    def topological(self) -> list[TAO]:
+        """Kahn topological order; raises on cycles."""
+        indeg = {n: len(n.parents) for n in self.nodes}
+        q = deque(n for n in self.nodes if indeg[n] == 0)
+        out: list[TAO] = []
+        while q:
+            n = q.popleft()
+            out.append(n)
+            for c in n.children:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    q.append(c)
+        if len(out) != len(self.nodes):
+            raise ValueError("TAO-DAG contains a cycle")
+        return out
+
+    # -- the paper's §3.2.1 criticality pre-pass ------------------------------
+    def assign_criticality(self) -> None:
+        """crit(n) = 1 + max(crit(children)); sinks get 1.
+
+        Equivalent to the paper's recursive top-down traversal, computed
+        bottom-up over a topological order so it is O(V+E) and
+        recursion-free.  After the pass, the entry of the longest path holds
+        the largest value (== critical-path length in nodes).
+        """
+        for n in reversed(self.topological()):
+            if not n.children:
+                n.criticality = 1
+            else:
+                n.criticality = 1 + max(c.criticality for c in n.children)
+
+    def critical_path_length(self) -> int:
+        """Length (in nodes) of the longest path."""
+        if not self.nodes:
+            return 0
+        if any(n.criticality == 0 for n in self.nodes):
+            self.assign_criticality()
+        return max(n.criticality for n in self.nodes)
+
+    def parallelism_degree(self) -> float:
+        """Paper §4.4: degree = #TAOs / Cp."""
+        cp = self.critical_path_length()
+        return len(self.nodes) / cp if cp else 0.0
+
+    # -- execution prep -------------------------------------------------------
+    def reset_execution_state(self) -> None:
+        for n in self.nodes:
+            n.pending = len(n.parents)
+            n.assigned_width = 0
+            n.assigned_leader = -1
+
+    def validate(self) -> None:
+        self.topological()  # raises on cycle
+        for n in self.nodes:
+            for c in n.children:
+                if n not in c.parents:
+                    raise ValueError(f"edge {n.id}->{c.id} missing back-pointer")
+
+
+def chain(dag: TaoDag, type: str, n: int, work: Any = None,
+          width_hint: int = 1) -> list[TAO]:
+    """Utility: a sequential chain of n TAOs (used by kernel profiling)."""
+    prev: TAO | None = None
+    out = []
+    for _ in range(n):
+        t = dag.add_task(type, work=work, width_hint=width_hint,
+                         deps=[prev] if prev else [])
+        out.append(t)
+        prev = t
+    return out

@@ -1,0 +1,127 @@
+"""Elastic places: worker topology, resource widths and the leader formula.
+
+The paper schedules moldable tasks (TAOs) onto *elastic places* — contiguous
+groups of ``width`` workers.  The leader of a place is computed with the
+XiTAO formula ``leader = floor(core / width) * width`` so that only aligned
+workers are eligible leaders for wide places (paper §3.1).
+
+On the TPU fleet a "worker" is a *device group* (a chip, host or pod slice);
+on the HiKey960 reproduction it is a core.  ``WorkerClass`` captures the
+single-ISA heterogeneity (big.LITTLE on the board; fast/efficient slice
+classes on a fleet).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+BIG = "big"
+LITTLE = "little"
+
+
+def leader_of(core: int, width: int) -> int:
+    """XiTAO leader formula: ``floor(core/width) * width`` (paper §3.1)."""
+    if width <= 0:
+        raise ValueError(f"width must be positive, got {width}")
+    return (core // width) * width
+
+
+def place_members(leader: int, width: int) -> range:
+    """Workers participating in the place anchored at ``leader``."""
+    return range(leader, leader + width)
+
+
+def valid_widths(n_workers: int) -> tuple[int, ...]:
+    """Power-of-two widths 1..n_workers (paper: k = log2(#cores) widths)."""
+    ws = []
+    w = 1
+    while w <= n_workers:
+        ws.append(w)
+        w *= 2
+    return tuple(ws)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Topology of the heterogeneous worker pool.
+
+    ``classes[i]`` gives the class ('big'/'little') of worker ``i``.  Workers
+    of one class are contiguous (as on big.LITTLE and on a fleet where a
+    "cluster" is a pod of a given generation).
+    """
+
+    classes: tuple[str, ...]
+
+    def __post_init__(self) -> None:
+        if not self.classes:
+            raise ValueError("ClusterSpec needs at least one worker")
+
+    # -- basic queries ----------------------------------------------------
+    @property
+    def n_workers(self) -> int:
+        return len(self.classes)
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return valid_widths(self.n_workers)
+
+    @property
+    def max_width(self) -> int:
+        return self.widths[-1]
+
+    def workers_of(self, cls: str) -> tuple[int, ...]:
+        return tuple(i for i, c in enumerate(self.classes) if c == cls)
+
+    @property
+    def big_workers(self) -> tuple[int, ...]:
+        return self.workers_of(BIG)
+
+    @property
+    def little_workers(self) -> tuple[int, ...]:
+        return self.workers_of(LITTLE)
+
+    def class_of(self, worker: int) -> str:
+        return self.classes[worker]
+
+    def width_index(self, width: int) -> int:
+        try:
+            return self.widths.index(width)
+        except ValueError:
+            raise ValueError(
+                f"width {width} not a valid width for {self.n_workers} workers"
+            ) from None
+
+    def eligible_leaders(self, width: int) -> tuple[int, ...]:
+        """Workers that can lead a place of ``width`` (aligned, in-range)."""
+        return tuple(
+            w for w in range(0, self.n_workers - width + 1, width)
+        )
+
+    def clusters(self) -> tuple[tuple[str, tuple[int, ...]], ...]:
+        """Contiguous (class, workers) runs."""
+        runs: list[tuple[str, list[int]]] = []
+        for i, c in enumerate(self.classes):
+            if runs and runs[-1][0] == c:
+                runs[-1][1].append(i)
+            else:
+                runs.append((c, [i]))
+        return tuple((c, tuple(ws)) for c, ws in runs)
+
+
+def hikey960() -> ClusterSpec:
+    """The paper's evaluation platform: 4 LITTLE (A53) + 4 big (A73).
+
+    Worker ids 0-3 are LITTLE, 4-7 are big (matching a common Linux cpu
+    enumeration on HiKey960; the scheduler never relies on which side is
+    first, only on ``classes``).
+    """
+    return ClusterSpec(classes=(LITTLE,) * 4 + (BIG,) * 4)
+
+
+def homogeneous(n_workers: int, cls: str = BIG) -> ClusterSpec:
+    return ClusterSpec(classes=(cls,) * n_workers)
+
+
+def fleet(n_big_groups: int, n_little_groups: int) -> ClusterSpec:
+    """A TPU-fleet style pool: fast slices first, efficient slices after."""
+    return ClusterSpec(classes=(BIG,) * n_big_groups + (LITTLE,) * n_little_groups)

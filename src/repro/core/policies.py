@@ -1,0 +1,256 @@
+"""Scheduling policies (paper §3.2-§3.3).
+
+All policies implement ``place(tao, ctx, waker) -> Placement`` and are invoked
+from the commit-and-wakeup mechanism when a TAO becomes ready.  They are
+shared verbatim between the threaded runtime and the discrete-event simulator
+through the small ``SchedulerContext`` interface.
+
+Implemented policies:
+
+* ``HomogeneousPolicy``    — the paper's base case: DPA + random work stealing,
+                             programmer width hints, no heterogeneity awareness.
+* ``CriticalityAwarePolicy``— CATS-style, *heterogeneity-aware* variant:
+                             critical TAOs -> random big core, rest -> LITTLE.
+* ``CriticalityPTTPolicy`` — CATS-style, *unaware* variant: critical TAOs ->
+                             best core learned from the PTT, rest -> random.
+* ``WeightBasedPolicy``    — Bias-style: weight = t_LITTLE / t_big from the
+                             PTT vs an adaptive threshold (init 1.5, EWMA 1:6).
+* ``MoldingPolicy``        — width molding wrapper: load-based first,
+                             history-based (time*width) otherwise; composes
+                             with any placement policy above.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Protocol
+
+from .dag import TAO
+from .places import BIG, LITTLE, ClusterSpec, leader_of
+from .ptt import PTTRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Outcome of a wake-up decision."""
+
+    target: int   # worker whose ready-queue receives the TAO
+    width: int    # resource width chosen for the TAO
+
+
+class SchedulerContext(Protocol):
+    """What policies may observe about the running system."""
+
+    spec: ClusterSpec
+    ptt: PTTRegistry
+    rng: random.Random
+
+    def system_load(self) -> int:
+        """Number of ready + running TAOs (the molding load signal)."""
+        ...
+
+    def running_max_criticality(self) -> int:
+        """Maximum criticality among currently scheduled, unfinished TAOs."""
+        ...
+
+
+class Policy:
+    name = "abstract"
+
+    def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """Clear adaptive state between runs (threshold etc.)."""
+
+
+# ---------------------------------------------------------------------------
+# Base case: homogeneous DPA + random work stealing
+# ---------------------------------------------------------------------------
+class HomogeneousPolicy(Policy):
+    """The paper's baseline: wake up locally, rely on random stealing."""
+
+    name = "homogeneous"
+
+    def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
+        return Placement(target=waker, width=tao.width_hint)
+
+
+# ---------------------------------------------------------------------------
+# Criticality-based scheduling (paper §3.2.1)
+# ---------------------------------------------------------------------------
+def _is_critical(tao: TAO, ctx: SchedulerContext) -> bool:
+    """Compare against the max criticality currently in flight (atomic var in
+    the C++ original; the runtime keeps an equivalent multiset)."""
+    return tao.criticality >= ctx.running_max_criticality()
+
+
+class CriticalityAwarePolicy(Policy):
+    """Heterogeneity-*aware*: needs the static big/LITTLE map."""
+
+    name = "crit-aware"
+
+    def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
+        if _is_critical(tao, ctx):
+            pool = ctx.spec.big_workers or ctx.spec.little_workers
+        else:
+            pool = ctx.spec.little_workers or ctx.spec.big_workers
+        return Placement(target=ctx.rng.choice(pool), width=tao.width_hint)
+
+
+class CriticalityPTTPolicy(Policy):
+    """Heterogeneity-*unaware*: critical TAOs go to the PTT-best core for the
+    TAO's width (untried cores explored first); non-critical go random."""
+
+    name = "crit-ptt"
+
+    def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
+        width = tao.width_hint
+        if _is_critical(tao, ctx):
+            table = ctx.ptt.table(tao.type)
+            leader, _t = table.best_leader(width)
+            if leader is not None:
+                return Placement(target=leader, width=width)
+        return Placement(target=ctx.rng.randrange(ctx.spec.n_workers), width=width)
+
+
+# ---------------------------------------------------------------------------
+# Weight-based scheduling (paper §3.2.2)
+# ---------------------------------------------------------------------------
+class WeightBasedPolicy(Policy):
+    """Bias-style: ``weight = t_LITTLE / t_big`` vs an adaptive threshold.
+
+    threshold_0 = 1.5;  threshold <- (potential_weight + 6*threshold) / 7
+    (paper: "updated at every comparison with a weighted ratio of 1:6").
+    """
+
+    name = "weight"
+    INITIAL_THRESHOLD = 1.5
+    OLD_WEIGHT = 6
+
+    def __init__(self) -> None:
+        self.threshold = self.INITIAL_THRESHOLD
+
+    def reset(self) -> None:
+        self.threshold = self.INITIAL_THRESHOLD
+
+    def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
+        width = tao.width_hint
+        spec = ctx.spec
+        bigs, littles = spec.big_workers, spec.little_workers
+        if not bigs or not littles:  # homogeneous pool: nothing to bias
+            return Placement(target=waker, width=width)
+        table = ctx.ptt.table(tao.type)
+        t_big = table.cluster_time(bigs, width)
+        t_little = table.cluster_time(littles, width)
+        # zero-init exploration: measure the untried cluster first
+        if t_big == 0.0 and t_little == 0.0:
+            pool = bigs if ctx.rng.random() < 0.5 else littles
+            return Placement(target=ctx.rng.choice(pool), width=width)
+        if t_big == 0.0:
+            return Placement(target=ctx.rng.choice(bigs), width=width)
+        if t_little == 0.0:
+            return Placement(target=ctx.rng.choice(littles), width=width)
+        weight = t_little / t_big
+        goes_big = weight > self.threshold
+        # adaptive threshold: EWMA 1:6 toward the mean weight of the system
+        self.threshold = (weight + self.OLD_WEIGHT * self.threshold) / (
+            self.OLD_WEIGHT + 1
+        )
+        pool = bigs if goes_big else littles
+        return Placement(target=ctx.rng.choice(pool), width=width)
+
+
+# ---------------------------------------------------------------------------
+# Task molding (paper §3.3)
+# ---------------------------------------------------------------------------
+class MoldingPolicy(Policy):
+    """Width molding wrapper: *load-based* primarily, *history-based* when the
+    system is loaded; placement is delegated to ``inner``.
+
+    * load-based: when the system load is lower than the available resources,
+      widen to the fair share ``n_workers // load`` (rounded down to a valid
+      power-of-two width) so idle resources get exploited.
+    * history-based: within the (tentative) leader's PTT row, adopt width w
+      only if ``time[w] * w < time[cur]`` — i.e. extra resources must pay for
+      themselves (paper: "the recorded execution time for that width x the
+      width has to be lower than the current execution time").  Untried widths
+      are explored first (zero-init).
+    """
+
+    name = "molding"
+
+    def __init__(self, inner: Policy):
+        self.inner = inner
+        self.name = f"molding({inner.name})"
+
+    def reset(self) -> None:
+        self.inner.reset()
+
+    # -- width selection ----------------------------------------------------
+    def _load_based_width(self, ctx: SchedulerContext, cur: int) -> int | None:
+        load = ctx.system_load()
+        n = ctx.spec.n_workers
+        if load >= n:
+            return None  # system busy: no justification for idle-resource sizing
+        share = n // max(load, 1)
+        w = 1
+        while w * 2 <= share and w * 2 <= ctx.spec.max_width:
+            w *= 2
+        return max(w, cur) if w > cur else cur
+
+    def _history_based_width(self, tao: TAO, ctx: SchedulerContext,
+                             leader: int, cur: int) -> int:
+        table = ctx.ptt.table(tao.type)
+        # the current width is itself a configuration to test: explore it
+        # before hopping elsewhere (zero-init exploration, paper §3.1)
+        if (cur in ctx.spec.widths
+                and leader_of(leader, cur) == leader
+                and table.untried(leader, cur)):
+            return cur
+        best_w, best_cost = table.best_width(leader)
+        if best_w is None:
+            return cur
+        if best_cost == 0.0:     # some other width untried: explore it
+            return best_w
+        t_cur = (table.time(leader, cur)
+                 if cur in ctx.spec.widths and leader_of(leader, cur) == leader
+                 else 0.0)
+        if t_cur == 0.0:
+            return cur
+        return best_w if best_cost < t_cur else cur
+
+    def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
+        base = self.inner.place(tao, ctx, waker)
+        cur = base.width
+        molded = self._load_based_width(ctx, cur)
+        if molded is None:
+            leader = leader_of(base.target, cur)
+            molded = self._history_based_width(tao, ctx, leader, cur)
+        return Placement(target=base.target, width=molded)
+
+
+# ---------------------------------------------------------------------------
+# registry used by benchmarks / CLI
+# ---------------------------------------------------------------------------
+def make_policy(name: str) -> Policy:
+    """Factory: 'homogeneous', 'crit-aware', 'crit-ptt', 'weight', and any of
+    them wrapped as 'molding:<name>'."""
+    if name.startswith("molding:"):
+        return MoldingPolicy(make_policy(name.split(":", 1)[1]))
+    return {
+        "homogeneous": HomogeneousPolicy,
+        "crit-aware": CriticalityAwarePolicy,
+        "crit-ptt": CriticalityPTTPolicy,
+        "weight": WeightBasedPolicy,
+    }[name]()
+
+
+ALL_POLICY_NAMES = (
+    "homogeneous",
+    "crit-aware",
+    "crit-ptt",
+    "weight",
+    "molding:crit-ptt",
+    "molding:weight",
+)

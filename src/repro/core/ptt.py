@@ -1,0 +1,153 @@
+"""Performance Trace Table (PTT) — the paper's §3.1 contribution.
+
+One table per TAO *type*, organised ``(worker) x (width-index)``, recording an
+exponentially-weighted moving average of execution time with weight 1:4::
+
+    saved = (4 * old + new) / 5
+
+Fields initialise to 0, which marks *untried* configurations and "ensures that
+all configurations will be tested at runtime" (paper).  Only the *leader* of a
+place records into its row, which in the C++ original keeps each row in a
+single cache line with a single writer; here it keeps the same semantics
+(single-writer rows) in a numpy table.
+
+The PTT doubles as an online model of the system: because recorded times
+include interference, DVFS and background load, policies built on it adapt to
+*temporal* heterogeneity too (paper §3.1, last paragraph).  The fleet runtime
+additionally uses it as a straggler detector (see ``repro.runtime_ft``).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Iterable
+
+import numpy as np
+
+from .places import ClusterSpec, leader_of
+
+EWMA_OLD_WEIGHT = 4  # paper: saved = (4*old + new) / 5
+
+
+class PTT:
+    """Trace table for one TAO type."""
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+        self._t = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.float64)
+        # Number of recorded samples per cell; used only for introspection /
+        # straggler statistics, not by the paper's policies.
+        self._n = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.int64)
+        self._lock = threading.Lock()
+
+    # -- recording ---------------------------------------------------------
+    def record(self, worker: int, width: int, elapsed: float) -> None:
+        """EWMA-record ``elapsed`` for (worker, width).
+
+        ``worker`` must be the *leader* of the executing place; callers are
+        responsible for the leader-only discipline (the runtime enforces it).
+        """
+        if elapsed < 0 or not math.isfinite(elapsed):
+            raise ValueError(f"bad elapsed time {elapsed!r}")
+        wi = self.spec.width_index(width)
+        with self._lock:
+            old = self._t[worker, wi]
+            if old == 0.0:
+                self._t[worker, wi] = elapsed
+            else:
+                self._t[worker, wi] = (EWMA_OLD_WEIGHT * old + elapsed) / (
+                    EWMA_OLD_WEIGHT + 1
+                )
+            self._n[worker, wi] += 1
+
+    # -- queries -----------------------------------------------------------
+    def time(self, worker: int, width: int) -> float:
+        """Recorded EWMA time; 0.0 means untried."""
+        return float(self._t[worker, self.spec.width_index(width)])
+
+    def samples(self, worker: int, width: int) -> int:
+        return int(self._n[worker, self.spec.width_index(width)])
+
+    def untried(self, worker: int, width: int) -> bool:
+        return self.time(worker, width) == 0.0
+
+    def best_leader(self, width: int, candidates: Iterable[int] | None = None):
+        """Fastest recorded leader for ``width``; untried leaders (0) come
+        first so every configuration gets explored (paper: zero-init).
+
+        Returns ``(leader, time)`` where time==0.0 flags an untried pick, or
+        ``(None, inf)`` when there are no candidates.
+        """
+        wi = self.spec.width_index(width)
+        if candidates is None:
+            candidates = self.spec.eligible_leaders(width)
+        best: tuple[int | None, float] = (None, math.inf)
+        for c in candidates:
+            if leader_of(c, width) != c:
+                continue  # not an eligible leader for this width
+            t = float(self._t[c, wi])
+            if t == 0.0:
+                return (c, 0.0)  # force exploration
+            if t < best[1]:
+                best = (c, t)
+        return best
+
+    def cluster_time(self, workers: Iterable[int], width: int) -> float:
+        """Mean recorded time over a set of workers at ``width`` (0 if none).
+
+        Used by weight-based scheduling to estimate the per-class execution
+        time of a TAO type.
+        """
+        wi = self.spec.width_index(width)
+        ts = [float(self._t[w, wi]) for w in workers]
+        ts = [t for t in ts if t > 0.0]
+        if not ts:
+            return 0.0
+        return float(np.mean(ts))
+
+    def best_width(self, leader: int, widths: Iterable[int] | None = None):
+        """History-based molding query (paper §3.3).
+
+        Looks *within the leader's row* for the width with the best
+        resource-efficiency, i.e. minimising ``time(width) * width``.  Untried
+        widths are returned first (exploration).  Returns ``(width, cost)``
+        with cost = time*width (0.0 when exploring).
+        """
+        if widths is None:
+            widths = self.spec.widths
+        best: tuple[int | None, float] = (None, math.inf)
+        for w in widths:
+            if leader_of(leader, w) != leader:
+                continue  # this worker cannot lead at width w
+            t = self.time(leader, w)
+            if t == 0.0:
+                return (w, 0.0)
+            cost = t * w
+            if cost < best[1]:
+                best = (w, cost)
+        return best
+
+    def snapshot(self) -> np.ndarray:
+        return self._t.copy()
+
+
+class PTTRegistry:
+    """``{tao_type: PTT}`` — one table per TAO class, lazily created."""
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+        self._tables: dict[str, PTT] = {}
+        self._lock = threading.Lock()
+
+    def table(self, tao_type: str) -> PTT:
+        tbl = self._tables.get(tao_type)
+        if tbl is None:
+            with self._lock:
+                tbl = self._tables.setdefault(tao_type, PTT(self.spec))
+        return tbl
+
+    def __contains__(self, tao_type: str) -> bool:
+        return tao_type in self._tables
+
+    def types(self) -> tuple[str, ...]:
+        return tuple(self._tables)

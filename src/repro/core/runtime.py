@@ -1,0 +1,188 @@
+"""Threaded mixed-mode runtime: the faithful XiTAO execution vehicle.
+
+Worker threads own a stealable *ready deque* and an *assembly queue*
+(XiTAO's two-level structure).  Popping a ready TAO triggers DPA — the
+popping worker computes the place ``[leader, leader+width)`` from its own id
+and pushes the TAO into the assembly queues of all members.  Members claim
+work *chunks* via an atomic counter and join/leave asynchronously; the last
+member to finish runs commit-and-wakeup, and the *leader* records its elapsed
+time into the PTT (paper §3.1-3.2).
+
+Work payloads (``TAO.work``) are ``ChunkedWork``: ``n_chunks`` independent
+chunk callables (here: jitted JAX computations, which release the GIL while
+executing, so threads genuinely overlap).  This is exactly the paper's model
+of a TAO as "a black box filled with work" with an embedded scheduler —
+the chunk counter *is* the embedded scheduler.
+
+On a TPU fleet each worker would own a device group and chunks would be
+``pjit`` calls on its slice; the orchestrators in ``serve_orchestrator`` /
+``train_orchestrator`` build such TAOs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+import threading
+import time
+from collections import deque
+from typing import Any, Callable
+
+from .dag import TAO, TaoDag
+from .places import ClusterSpec, leader_of, place_members
+from .policies import Policy
+from .scheduler import SchedulerCore
+
+
+@dataclasses.dataclass
+class ChunkedWork:
+    """A moldable work payload: ``chunk_fn(i)`` for i in [0, n_chunks)."""
+
+    chunk_fn: Callable[[int], Any]
+    n_chunks: int = 1
+
+
+class _TaoExec:
+    """Per-execution state of a TAO (chunk counter, membership)."""
+
+    __slots__ = ("tao", "leader", "width", "members", "next_chunk",
+                 "remaining_members", "start_time", "lock", "leader_start")
+
+    def __init__(self, tao: TAO, leader: int, width: int, n_workers: int):
+        self.tao = tao
+        self.leader = leader
+        self.width = width
+        self.members = [m for m in place_members(leader, width) if m < n_workers]
+        self.next_chunk = 0
+        self.remaining_members = len(self.members)
+        self.start_time = 0.0
+        self.leader_start = 0.0
+        self.lock = threading.Lock()
+
+
+class ThreadedRuntime:
+    """Executes a TAO-DAG on ``spec.n_workers`` threads under ``policy``."""
+
+    def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0,
+                 steal_backoff_s: float = 1e-5):
+        self.spec = spec
+        self.core = SchedulerCore(spec, policy, seed=seed)
+        self.steal_backoff_s = steal_backoff_s
+        self._rngs = [random.Random(seed * 7919 + i) for i in range(spec.n_workers)]
+        n = spec.n_workers
+        self._ready: list[deque] = [deque() for _ in range(n)]
+        self._assembly: list[deque] = [deque() for _ in range(n)]
+        self._qlocks = [threading.Lock() for _ in range(n)]
+        self._alocks = [threading.Lock() for _ in range(n)]
+        self._done = threading.Event()
+        self._total = 0
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------------ admin
+    def _enqueue_ready(self, tao: TAO, waker: int) -> None:
+        placement = self.core.admit(tao, waker)
+        with self._qlocks[placement.target]:
+            self._ready[placement.target].append(tao)
+
+    def _dpa_distribute(self, tao: TAO, popper: int) -> None:
+        """Dynamic Place Allocation: push into members' assembly queues."""
+        width = tao.assigned_width
+        leader = leader_of(popper, width)
+        ex = _TaoExec(tao, leader, width, self.spec.n_workers)
+        ex.start_time = time.perf_counter()
+        for m in ex.members:
+            with self._alocks[m]:
+                self._assembly[m].append(ex)
+
+    # ------------------------------------------------------------- worker loop
+    def _execute_chunks(self, ex: _TaoExec, worker: int) -> None:
+        work: ChunkedWork = ex.tao.work or ChunkedWork(lambda i: None, 1)
+        is_leader = worker == ex.leader
+        if is_leader:
+            ex.leader_start = time.perf_counter()
+        while True:
+            with ex.lock:
+                i = ex.next_chunk
+                if i >= work.n_chunks:
+                    break
+                ex.next_chunk += 1
+            work.chunk_fn(i)
+        # member leaves; the LAST one runs commit-and-wakeup (paper §3.2)
+        with ex.lock:
+            ex.remaining_members -= 1
+            last = ex.remaining_members == 0
+        if is_leader:
+            elapsed = time.perf_counter() - ex.leader_start
+            self.core.record_time(ex.tao, ex.leader, ex.width, max(elapsed, 1e-9))
+        if last:
+            for child in self.core.commit_and_wakeup(ex.tao):
+                self._enqueue_ready(child, waker=worker)
+            if self.core.completed >= self._total:
+                self._done.set()
+
+    def _try_assembly(self, worker: int) -> bool:
+        with self._alocks[worker]:
+            ex = self._assembly[worker].popleft() if self._assembly[worker] else None
+        if ex is None:
+            return False
+        self._execute_chunks(ex, worker)
+        return True
+
+    def _try_ready(self, worker: int, victim: int) -> bool:
+        with self._qlocks[victim]:
+            tao = self._ready[victim].popleft() if self._ready[victim] else None
+        if tao is None:
+            return False
+        self._dpa_distribute(tao, popper=worker)
+        return True
+
+    def _worker_loop(self, worker: int) -> None:
+        rng = self._rngs[worker]
+        n = self.spec.n_workers
+        try:
+            while not self._done.is_set():
+                # 1) assembly work (TAOs already placed on me)
+                if self._try_assembly(worker):
+                    continue
+                # 2) my own ready deque (locality)
+                if self._try_ready(worker, worker):
+                    continue
+                # 3) one random steal attempt, interleaved with local checks
+                victim = rng.randrange(n)
+                if victim != worker and self._try_ready(worker, victim):
+                    continue
+                time.sleep(self.steal_backoff_s)
+        except BaseException as e:  # surface worker crashes to run()
+            self._error = e
+            self._done.set()
+
+    # ------------------------------------------------------------------ run
+    def run(self, dag: TaoDag, timeout_s: float = 600.0) -> dict:
+        roots = self.core.prepare(dag)
+        self._total = len(dag)
+        self._done.clear()
+        for r in roots:
+            self._enqueue_ready(r, waker=0)
+        threads = [
+            threading.Thread(target=self._worker_loop, args=(i,), daemon=True)
+            for i in range(self.spec.n_workers)
+        ]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        finished = self._done.wait(timeout=timeout_s)
+        elapsed = time.perf_counter() - t0
+        self._done.set()
+        for t in threads:
+            t.join(timeout=5.0)
+        if self._error is not None:
+            raise self._error
+        if not finished:
+            raise TimeoutError(
+                f"DAG did not complete in {timeout_s}s "
+                f"({self.core.completed}/{self._total} TAOs)")
+        return {
+            "elapsed_s": elapsed,
+            "throughput_taos_per_s": self._total / elapsed if elapsed > 0 else 0.0,
+            "completed": self.core.completed,
+        }

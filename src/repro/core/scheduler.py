@@ -1,0 +1,133 @@
+"""Shared scheduler core: DPA bookkeeping + commit-and-wakeup logic.
+
+Both execution vehicles (the threaded runtime and the discrete-event
+simulator) drive this object.  It owns the pieces the paper's policies need
+to observe — the PTT registry, the running-criticality multiset (the "atomic
+variable" of §3.2.1) and the load counter — and performs the wake-up
+transition: parent completes -> child pending-- -> ready -> policy placement.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+import threading
+from typing import Iterable
+
+from .dag import TAO, TaoDag
+from .places import ClusterSpec, leader_of
+from .policies import Placement, Policy
+from .ptt import PTTRegistry
+
+
+class _CritMultiset:
+    """Max-query multiset of criticalities (lazy-deletion heap)."""
+
+    def __init__(self) -> None:
+        self._heap: list[int] = []      # negated values
+        self._count: dict[int, int] = {}
+        self._size = 0
+
+    def add(self, v: int) -> None:
+        heapq.heappush(self._heap, -v)
+        self._count[v] = self._count.get(v, 0) + 1
+        self._size += 1
+
+    def remove(self, v: int) -> None:
+        c = self._count.get(v, 0)
+        if c <= 0:
+            raise KeyError(f"criticality {v} not present")
+        self._count[v] = c - 1
+        self._size -= 1
+
+    def max(self) -> int:
+        while self._heap:
+            v = -self._heap[0]
+            if self._count.get(v, 0) > 0:
+                return v
+            heapq.heappop(self._heap)
+        return 0
+
+    def __len__(self) -> int:
+        return self._size
+
+
+class SchedulerCore:
+    """DPA + commit-and-wakeup state machine (execution-vehicle agnostic).
+
+    Implements the ``SchedulerContext`` protocol consumed by policies.
+    """
+
+    def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0):
+        self.spec = spec
+        self.policy = policy
+        self.ptt = PTTRegistry(spec)
+        self.rng = random.Random(seed)
+        self._crit = _CritMultiset()
+        self._in_flight = 0           # ready+running TAOs (molding load signal)
+        self._completed = 0
+        self._lock = threading.RLock()
+
+    # -- SchedulerContext ----------------------------------------------------
+    def system_load(self) -> int:
+        return self._in_flight
+
+    def running_max_criticality(self) -> int:
+        return self._crit.max()
+
+    # -- lifecycle transitions -------------------------------------------------
+    def admit(self, tao: TAO, waker: int) -> Placement:
+        """A TAO became ready: run the policy, clamp the width, account it.
+
+        Returns the placement; the execution vehicle enqueues accordingly.
+        """
+        with self._lock:
+            placement = self.policy.place(tao, self, waker)
+            width = self._clamp_width(placement.width)
+            target = placement.target % self.spec.n_workers
+            tao.assigned_width = width
+            tao.assigned_leader = leader_of(target, width)
+            self._crit.add(tao.criticality)
+            self._in_flight += 1
+            return Placement(target=target, width=width)
+
+    def commit_and_wakeup(self, tao: TAO) -> list[TAO]:
+        """Paper §3.2: executed by the last core completing a TAO.  Returns
+        the children that became ready (the vehicle then calls ``admit``)."""
+        with self._lock:
+            self._crit.remove(tao.criticality)
+            self._in_flight -= 1
+            self._completed += 1
+            ready = []
+            for child in tao.children:
+                child.pending -= 1
+                if child.pending == 0:
+                    ready.append(child)
+            return ready
+
+    def record_time(self, tao: TAO, leader: int, width: int, elapsed: float) -> None:
+        """Leader-only PTT update (the vehicles enforce leader discipline)."""
+        self.ptt.table(tao.type).record(leader, width, elapsed)
+
+    # -- helpers ----------------------------------------------------------------
+    def _clamp_width(self, width: int) -> int:
+        widths = self.spec.widths
+        if width in widths:
+            return width
+        # round down to the nearest valid power-of-two width
+        best = widths[0]
+        for w in widths:
+            if w <= width:
+                best = w
+        return best
+
+    @property
+    def completed(self) -> int:
+        return self._completed
+
+    def prepare(self, dag: TaoDag) -> list[TAO]:
+        """Reset execution state, run the criticality pre-pass (paper: done as
+        the runtime is started) and return the initially-ready TAOs."""
+        dag.validate()
+        dag.assign_criticality()
+        dag.reset_execution_state()
+        return dag.roots()

@@ -1,0 +1,158 @@
+"""Elastic training on the XiTAO scheduler: a training step as a
+mixed-mode DAG of microbatch tasks.
+
+One optimizer step with K microbatches becomes:
+
+    fwdbwd(mb_0) ... fwdbwd(mb_{K-1})      (compute-bound, moldable)
+            \\    |    /
+             grad_reduce                    (BW-bound: the paper's copy class)
+                 |
+             opt_update                     (small)
+
+Chained over steps.  Criticality-aware scheduling keeps the reduce/update
+chain (the pipeline's critical path) on fast groups; the PTT absorbs
+stragglers (a slow group's fwdbwd EWMA rises, so molding/weight placement
+route around it — see ``runtime_ft.StragglerDetector`` for the fleet hook).
+
+``run_training_threaded`` executes REAL jitted grad computations: each
+fwdbwd TAO computes grads for its microbatch and accumulates into a shared
+buffer (lock-guarded, commutative adds), grad_reduce averages, opt_update
+applies AdamW.  This is the end-to-end CPU vehicle; at fleet scale the same
+DAG is simulated (``simulate_training``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .dag import TAO, TaoDag
+from .places import BIG, LITTLE, ClusterSpec
+from .policies import Policy
+from .runtime import ChunkedWork, ThreadedRuntime
+from .simulator import KernelModel, SimResult, Simulator
+
+
+def build_training_dag(n_steps: int, n_microbatches: int,
+                       width_hint: int = 1) -> TaoDag:
+    """Static DAG for ``n_steps`` optimizer steps (simulator payloads)."""
+    dag = TaoDag()
+    prev_opt = None
+    for s in range(n_steps):
+        mbs = []
+        for m in range(n_microbatches):
+            deps = [prev_opt] if prev_opt is not None else []
+            mbs.append(dag.add_task("fwdbwd", width_hint=width_hint,
+                                    work=1.0, deps=deps))
+        red = dag.add_task("grad_reduce", width_hint=width_hint, work=1.0,
+                           deps=mbs)
+        prev_opt = dag.add_task("opt_update", width_hint=1, work=0.1,
+                                deps=[red])
+    return dag
+
+
+def training_kernel_models() -> dict:
+    return {
+        "fwdbwd": KernelModel(            # compute-bound
+            t_ref=0.020, speed={BIG: 2.4, LITTLE: 1.0},
+            efficiency={1: 1.0, 2: 0.97, 4: 0.94, 8: 0.9}),
+        "grad_reduce": KernelModel(       # BW-bound (copy class)
+            t_ref=0.008, speed={BIG: 1.5, LITTLE: 1.0},
+            efficiency={1: 1.0, 2: 0.7, 4: 0.4, 8: 0.22},
+            stream=True, bw_cap={BIG: 2.0, LITTLE: 2.5}),
+        "opt_update": KernelModel(        # small, BW-ish
+            t_ref=0.002, speed={BIG: 1.5, LITTLE: 1.0},
+            efficiency={1: 1.0, 2: 0.6, 4: 0.35, 8: 0.2}),
+    }
+
+
+def simulate_training(n_steps: int, n_microbatches: int, spec: ClusterSpec,
+                      policy: Policy, width_hint: int = 1,
+                      seed: int = 0) -> SimResult:
+    dag = build_training_dag(n_steps, n_microbatches, width_hint=width_hint)
+    sim = Simulator(spec, policy, kernel_models=training_kernel_models(),
+                    seed=seed)
+    return sim.run(dag)
+
+
+# ---------------------------------------------------------------------------
+# real threaded execution (tiny model, CPU)
+# ---------------------------------------------------------------------------
+class GradAccumulator:
+    """Lock-guarded grad accumulation shared by fwdbwd TAOs."""
+
+    def __init__(self, like: Any):
+        self._zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  like)
+        self.buf = self._zero
+        self.count = 0
+        self.lock = threading.Lock()
+
+    def add(self, grads: Any) -> None:
+        with self.lock:
+            self.buf = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                    self.buf, grads)
+            self.count += 1
+
+    def drain(self) -> tuple[Any, int]:
+        with self.lock:
+            out, n = self.buf, self.count
+            self.buf = self._zero
+            self.count = 0
+        return out, n
+
+
+def run_training_threaded(
+    spec: ClusterSpec,
+    policy: Policy,
+    params: Any,
+    opt_state: Any,
+    grad_fn: Callable[[Any, Any], tuple[Any, Any]],   # (params, batch) -> (grads, metrics)
+    update_fn: Callable[[Any, Any, Any], tuple[Any, Any]],  # (params, grads, opt) -> (params, opt)
+    batches: list,                                    # [step][microbatch]
+    seed: int = 0,
+    timeout_s: float = 600.0,
+) -> dict:
+    """Executes the training DAG with real grads; returns final state+stats."""
+    state = {"params": params, "opt": opt_state, "losses": []}
+    acc = GradAccumulator(params)
+    state_lock = threading.Lock()
+
+    dag = TaoDag()
+    prev_opt = None
+    for step_batches in batches:
+        mb_taos = []
+        for mb in step_batches:
+            def fwdbwd(i, mb=mb):
+                with state_lock:
+                    p = state["params"]
+                grads, metrics = grad_fn(p, mb)
+                acc.add(grads)
+                if "loss" in metrics:
+                    state["losses"].append(float(metrics["loss"]))
+            deps = [prev_opt] if prev_opt is not None else []
+            mb_taos.append(dag.add_task(
+                "fwdbwd", work=ChunkedWork(fwdbwd, 1), deps=deps))
+
+        def reduce_and_update(i):
+            grads, n = acc.drain()
+            grads = jax.tree.map(lambda g: g / max(n, 1), grads)
+            with state_lock:
+                state["params"], state["opt"] = update_fn(
+                    state["params"], grads, state["opt"])
+
+        red = dag.add_task("grad_reduce", work=ChunkedWork(lambda i: None, 1),
+                           deps=mb_taos)
+        prev_opt = dag.add_task("opt_update",
+                                work=ChunkedWork(reduce_and_update, 1),
+                                deps=[red])
+
+    rt = ThreadedRuntime(spec, policy, seed=seed)
+    stats = rt.run(dag, timeout_s=timeout_s)
+    stats["losses"] = state["losses"]
+    stats["params"] = state["params"]
+    stats["opt"] = state["opt"]
+    return stats

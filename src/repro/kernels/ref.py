@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def copy(x: jax.Array) -> jax.Array:
+    return x + jnp.zeros_like(x)  # forces a materialized copy
+
+
+def triad(a, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.asarray(a, x.dtype) * x + y
+
+
+def sort_rows(x: jax.Array) -> jax.Array:
+    return jnp.sort(x, axis=-1)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              sm_scale: float | None = None) -> jax.Array:
+    """Dense reference attention with GQA / causal / sliding window.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, Skv, D).  O(S^2) memory — test shapes
+    only.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * sm_scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    # rows with no visible keys (possible with tiny windows) -> zero output
+    any_visible = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    out = jnp.where(any_visible, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+_DOC = """Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell, lower + compile the production
+step on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh using
+ShapeDtypeStruct stand-ins (no allocation), then record:
+
+  * memory_analysis()  — proves the program fits per-device HBM
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective bytes   — parsed from the optimized HLO text per collective op
+
+Results are written incrementally to experiments/dryrun/<mesh>/<cell>.json so
+interrupted sweeps resume where they left off.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod | --single-pod]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (ARCH_IDS, SHAPES, SHAPE_NAMES, cell_skip_reason,
+                       get_config, input_specs)
+from ..models import (get_model, make_decode_step, make_encode_step,
+                      make_prefill_step, make_train_step)
+from ..optimizer import AdamWState
+from ..parallel.sharding import use_sharding
+from .mesh import make_production_mesh, mesh_chip_count
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor type in an HLO type string (incl tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-op byte totals from optimized HLO text.
+
+    Counts each op's *result* size once — for a SPMD module the text is the
+    per-device program, so these are bytes per device per step.
+    """
+    out = {c: 0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.*?) (\w[\w\-]*)\(", line)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        base = op.split(".")[0]
+        # normalize fusion variants like all-reduce-start
+        for c in COLLECTIVES:
+            if base == c or base == f"{c}-start":
+                out[c] += _shape_bytes(type_str)
+                out["count"] += 1
+                break
+    return out
+
+
+def _sharding_tree(tree):
+    return jax.tree.map(lambda s: getattr(s, "sharding", None), tree)
+
+
+def abstract_opt_state(abstract_params: dict) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                         sharding=p.sharding)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(f32, abstract_params),
+        nu=jax.tree.map(f32, abstract_params),
+    )
+
+
+def build_step_and_specs(cfg, shape):
+    """-> (step_fn, kwargs of ShapeDtypeStructs, donate_argnums)."""
+    model = get_model(cfg)
+    specs = input_specs(cfg, shape)
+    aparams = model.abstract_params()
+    if shape.kind == "train":
+        step = make_train_step(model)
+        aopt = abstract_opt_state(aparams)
+        return step, (aparams, aopt, specs["batch"]), (0, 1)
+    if shape.kind == "prefill":
+        if cfg.family == "encoder":
+            return make_encode_step(model), (aparams, specs["batch"]), ()
+        return make_prefill_step(model), (aparams, specs["batch"]), ()
+    if shape.kind == "decode":
+        step = make_decode_step(model)
+        return step, (aparams, specs["tokens"], specs["cache"]), (2,)
+    raise ValueError(shape.kind)
+
+
+def _compile_cell(cfg, shape, mesh, rules=None):
+    with use_sharding(mesh, rules):
+        step, args, donate = build_step_and_specs(cfg, shape)
+        t0 = time.time()
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, round(t_lower, 2), round(t_compile, 2)
+
+
+def _costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": collective_bytes(hlo),
+        "hlo_lines": hlo.count("\n"),
+    }
+
+
+def _combine_costs(outside: dict, per_layer: list) -> dict:
+    """total = outside + sum_i n_i * (layer_i - outside).
+
+    The scan-over-layers body is counted ONCE by XLA cost analysis, so exact
+    per-step costs come from auxiliary 1-layer compiles: cost(1 layer) -
+    cost(0 layers) is one layer's cost (collectives included), multiplied by
+    the layer count.  ``per_layer`` is [(count, costs_dict), ...].
+    """
+    def add(agg, costs, factor):
+        agg["flops"] += factor * costs["flops"]
+        agg["bytes_accessed"] += factor * costs["bytes_accessed"]
+        for k, v in costs["collectives"].items():
+            agg["collectives"][k] = agg["collectives"].get(k, 0) + factor * v
+
+    total = {"flops": 0.0, "bytes_accessed": 0.0, "collectives": {}}
+    add(total, outside, 1.0)
+    for count, costs in per_layer:
+        add(total, costs, count)
+        add(total, outside, -count)
+    total["collectives"] = {k: int(v) for k, v in
+                            total["collectives"].items()}
+    return total
+
+
+def _cost_variants(cfg):
+    """[(layer_count, cfg_variant)] + the 0-layer 'outside' variant.
+
+    Variants unroll nothing: a length-1 scan is counted once == exactly one
+    layer.  ``dense_attn_max_seq`` is raised so the q-chunked attention scan
+    (also counted once by XLA) is replaced by the FLOP-equivalent dense path.
+    """
+    import dataclasses as dc
+    big = 1 << 30
+    # remat stays as configured: recompute is real work the roofline counts.
+    # The q-chunk lax.scan must be replaced by a FLOP-equivalent unscanned
+    # path for exact counting: the dense path when masking-only, or the
+    # block-skip python loop when enabled (which is already unscanned AND
+    # FLOP-different by design — so it must NOT be overridden away).
+    base = dict(scan_layers=False)
+    if not cfg.swa_block_skip:
+        base["dense_attn_max_seq"] = big
+    cfg0 = dc.replace(cfg, n_layers=0, global_layers=(), **base)
+    if cfg.family == "hybrid":
+        n_glob = len(cfg.global_layers)
+        return cfg0, [
+            (cfg.n_layers - n_glob,
+             dc.replace(cfg, n_layers=1, global_layers=(), **base)),
+            (n_glob, dc.replace(cfg, n_layers=1, global_layers=(0,), **base)),
+        ]
+    return cfg0, [(cfg.n_layers, dc.replace(cfg, n_layers=1,
+                                            global_layers=(), **base))]
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh, *,
+                cost_accounting: bool = True,
+                overrides: dict | None = None) -> dict:
+    import dataclasses as dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    reason = cell_skip_reason(cfg, shape)
+    if reason is not None:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": reason}
+
+    # --- 1) the real program: proves the mesh/sharding compiles + memory ---
+    rules = None
+    if shape.kind == "decode" and cfg.decode_no_fsdp:
+        from ..parallel.sharding import LOGICAL_RULES
+        rules = dict(LOGICAL_RULES)
+        # serve-time weight layout: contracting dims stay local; hidden/ff
+        # dims absorb every mesh axis -> no per-layer weight all-gather,
+        # just a tiny activation all-reduce over the token batch
+        rules.update({"embed": (), "ff": ("model", "data"),
+                      "heads": ("model", "data"),
+                      "kv_heads": ("model", "data"),
+                      "vocab": ("model", "data")})
+    compiled, t_lower, t_compile = _compile_cell(cfg, shape, mesh,
+                                                 rules=rules)
+    mem = compiled.memory_analysis()
+    scanned = _costs(compiled)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "mesh": dict(mesh.shape),
+        "chips": mesh_chip_count(mesh),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "scanned_program": scanned,   # scan bodies counted once (XLA quirk)
+        "memory": {
+            "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_size_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_size_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+    }
+
+    # --- 2) exact per-step cost: outside + L x per-layer (1-layer compiles) --
+    if cfg.family == "hybrid":
+        # hymba layers are unrolled Python loops: the full program's cost
+        # analysis is already per-step-exact (only the baseline q-chunk
+        # attention scan is counted once; the optimized swa_block_skip path
+        # unrolls it too).  The outside/per-layer decomposition would double
+        # count differently-optimized subprograms, so use the module itself.
+        result["flops"] = scanned["flops"]
+        result["bytes_accessed"] = scanned["bytes_accessed"]
+        result["collectives"] = scanned["collectives"]
+        result["cost_detail"] = {"note": "unrolled module, exact"}
+        cost_accounting = False
+    if cost_accounting:
+        cfg0, layer_variants = _cost_variants(cfg)
+        outside = _costs(_compile_cell(cfg0, shape, mesh, rules=rules)[0])
+        per_layer = []
+        layers_detail = []
+        for count, cfg_i in layer_variants:
+            ci = _costs(_compile_cell(cfg_i, shape, mesh, rules=rules)[0])
+            per_layer.append((count, ci))
+            layers_detail.append({"count": count, **ci})
+        total = _combine_costs(outside, per_layer)
+        result["flops"] = total["flops"]
+        result["bytes_accessed"] = total["bytes_accessed"]
+        result["collectives"] = total["collectives"]
+        result["cost_detail"] = {"outside": outside, "layers": layers_detail}
+    else:
+        result["flops"] = scanned["flops"]
+        result["bytes_accessed"] = scanned["bytes_accessed"]
+        result["collectives"] = scanned["collectives"]
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=SHAPE_NAMES)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="only the 2x16x16 mesh")
+    ap.add_argument("--single-pod", action="store_true",
+                    help="only the 16x16 mesh")
+    ap.add_argument("--force", action="store_true", help="recompute cells")
+    ap.add_argument("--no-cost-accounting", action="store_true",
+                    help="skip the 0/1-layer cost compiles (multi-pod pass: "
+                         "the roofline table is single-pod only)")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="ModelConfig override for perf iteration, e.g. "
+                         "--set swa_block_skip=True (repeatable)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    import ast
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    meshes = []
+    if not args.multi_pod:
+        meshes.append(("single_pod", False))
+    if not args.single_pod:
+        meshes.append(("multi_pod", True))
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPE_NAMES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    out_root = pathlib.Path(args.out)
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        out_dir = out_root / mesh_name
+        out_dir.mkdir(parents=True, exist_ok=True)
+        for arch, shape in cells:
+            path = out_dir / f"{arch}__{shape}.json"
+            if path.exists() and not args.force:
+                prev = json.loads(path.read_text())
+                print(f"[cached] {mesh_name} {arch} x {shape}: "
+                      f"{prev['status']}")
+                continue
+            print(f"[dryrun] {mesh_name} {arch} x {shape} ...", flush=True)
+            try:
+                res = dryrun_cell(
+                    arch, shape, mesh,
+                    cost_accounting=not args.no_cost_accounting,
+                    overrides=overrides)
+                if overrides:
+                    res["overrides"] = {k: repr(v)
+                                        for k, v in overrides.items()}
+            except Exception as e:  # noqa: BLE001 — record and continue
+                res = {"arch": arch, "shape": shape, "status": "fail",
+                       "error": f"{type(e).__name__}: {e}"}
+                n_fail += 1
+                print(f"  FAIL: {res['error']}", flush=True)
+            path.write_text(json.dumps(res, indent=1))
+            if res["status"] == "ok":
+                n_ok += 1
+                mem_gb = (res["memory"]["argument_size_bytes"] +
+                          res["memory"]["temp_size_bytes"]) / 2**30
+                print(f"  ok: {res['flops']:.3e} FLOPs, "
+                      f"{res['bytes_accessed']:.3e} B accessed, "
+                      f"mem/device ~{mem_gb:.2f} GiB, "
+                      f"compile {res['compile_s']}s", flush=True)
+            elif res["status"] == "skip":
+                n_skip += 1
+                print(f"  skip: {res['reason']}")
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+must set ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax initialization, while smoke tests must see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None,
+                    model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (CPU tests)."""
+    n = n_devices or len(jax.devices())
+    if n % model:
+        raise ValueError(f"{n} devices not divisible by model={model}")
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

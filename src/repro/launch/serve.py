@@ -1,0 +1,79 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Batched prefill+decode serving of a (smoke-sized) model, scheduled either
+directly or through the XiTAO runtime (``--orchestrate``), where the PTT +
+weight-based policy learn prefill->big / decode->LITTLE placement online.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..models import get_model
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--orchestrate", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "encoder":
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (args.batch, args.prompt_len), 0,
+                              cfg.vocab_size)
+
+    prefill_j = jax.jit(lambda p, b: model.prefill(
+        p, b, max_len=args.prompt_len + args.gen + 1))
+    decode_j = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill_j(params, {"tokens": toks})
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen):
+        out_tokens.append(next_tok)
+        logits, cache = decode_j(params, next_tok, cache)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    total_tokens = args.batch * args.gen
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill: {t_prefill:.3f}s "
+          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
+    print(f"decode:  {t_decode:.3f}s ({total_tokens / t_decode:.0f} tok/s)")
+
+    if args.orchestrate:
+        from ..core import hikey960, make_policy
+        from ..core.serve_orchestrator import (ServeRequest,
+                                               run_serving_threaded)
+        reqs = [ServeRequest(i, args.prompt_len, args.gen)
+                for i in range(args.batch * 4)]
+        out = run_serving_threaded(
+            reqs, hikey960(), make_policy("molding:weight"),
+            prefill_fn=lambda r: prefill_j(params, {"tokens": toks}),
+            decode_fn=lambda r, i: decode_j(params, next_tok, cache))
+        print(f"orchestrated: {out['completed']} TAOs, "
+              f"{out['tokens_per_s']:.0f} tok/s (scheduler view)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,281 @@
+"""Shared model layers: RoPE, GQA attention (dense / q-chunked flash /
+decode), SwiGLU, RMSNorm, and sort-based MoE dispatch.
+
+All functions are pure and sharding-annotated via ``parallel.sharding
+.constrain`` (no-ops outside a mesh context).  Attention switches to a
+q-chunked online-softmax path (pure-jnp flash, ``lax.scan`` over query
+blocks) above ``cfg.dense_attn_max_seq`` so 32k prefill never materializes
+an S x S score tensor.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(ms + eps)) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float, fraction: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (S,) or (B, S).  ``fraction < 1`` rotates
+    only the leading sub-dim (ChatGLM-style partial/2d RoPE)."""
+    b, s, h, d = x.shape
+    inv = rope_freqs(d, theta, fraction)
+    rot = inv.shape[0] * 2
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    xpass = x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(b, s, h, rot).astype(x.dtype)
+    return jnp.concatenate([out, xpass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None) -> jax.Array:
+    """(Sq, Sk) additive bias from causal/window visibility."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _dense_attention(q, k, v, q_pos, k_pos, causal, window, scale):
+    """q: (B,Hq,Sq,D); k/v: (B,Hkv,Sk,D) — materializes (Sq,Sk) scores."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + _mask_bias(q_pos, k_pos, causal, window)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale, chunk):
+    """Online-softmax over q chunks: peak memory O(chunk * Sk)."""
+    b, hq, sq, d = q.shape
+    if sq % chunk:
+        raise ValueError(f"seq {sq} not divisible by attn chunk {chunk}")
+    hkv = k.shape[1]
+    g = hq // hkv
+    nq = sq // chunk
+    qc = q.reshape(b, hkv, g, nq, chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    qp = q_pos.reshape(nq, chunk)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_chunk(_, qs):
+        qi, qpos = qs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                       kf) * scale
+        s = s + _mask_bias(qpos, k_pos, causal, window)[None, None, None]
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.maximum(m, -1e30)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf) / jnp.maximum(l, 1e-30)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_chunk, None, (qc, qp))
+    # outs: (nq, B, Hkv, g, chunk, D)
+    o = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, d)
+    return o
+
+
+def _chunked_attention_skip(q, k, v, q_pos, k_pos, causal, window, scale,
+                            chunk):
+    """Block-skipping chunked attention: a Python loop over q chunks with a
+    *static* kv slice per chunk — causal chunks only see keys up to their
+    last row, SWA chunks only the window.  Saves ~2x FLOPs for causal and
+    O(S/window)x for sliding windows vs masking-only (hillclimb: the
+    `swa_block_skip` knob)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    sk = k.shape[2]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    outs = []
+    for i in range(sq // chunk):
+        q_lo, q_hi = i * chunk, (i + 1) * chunk
+        hi = min(q_hi, sk) if causal else sk
+        lo = 0
+        if window is not None:
+            lo = max(0, q_lo - (window - 1))
+            lo = (lo // chunk) * chunk          # chunk-aligned slice start
+        qi = q[:, :, q_lo:q_hi].reshape(b, hkv, g, chunk, d)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                       kf[:, :, lo:hi]) * scale
+        s = s + _mask_bias(q_pos[q_lo:q_hi], k_pos[lo:hi], causal,
+                           window)[None, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf[:, :, lo:hi])
+        outs.append(o.reshape(b, hq, chunk, d).astype(q.dtype))
+    return jnp.concatenate(outs, axis=2)
+
+
+def attention(q, k, v, *, q_pos, k_pos, causal=True, window=None,
+              dense_max_seq=1024, chunk=1024, scale=None,
+              block_skip=False):
+    """GQA attention dispatch.  q: (B,Hq,Sq,D); k/v: (B,Hkv,Sk,D)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if q.shape[2] <= dense_max_seq or q.shape[2] % chunk:
+        return _dense_attention(q, k, v, q_pos, k_pos, causal, window, scale)
+    if block_skip:
+        return _chunked_attention_skip(q, k, v, q_pos, k_pos, causal, window,
+                                       scale, chunk)
+    return _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                              chunk)
+
+
+def decode_attention(q, k_cache, v_cache, *, valid_len=None,
+                     valid_mask=None, scale=None):
+    """Single-position attention over a cache.
+
+    q: (B, Hq, 1, D); k/v_cache: (B, Hkv, S, D).  Visibility comes from
+    ``valid_len`` (entries < valid_len are visible) or an explicit
+    ``valid_mask`` (B, S) / (S,) for rolling SWA buffers.
+    """
+    b, hq, _, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    if valid_mask is None:
+        if valid_len is None:
+            raise ValueError("need valid_len or valid_mask")
+        valid_mask = jnp.arange(s) < valid_len
+    if valid_mask.ndim == 1:
+        valid_mask = valid_mask[None, :]
+    scores = jnp.where(valid_mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def swiglu(x, w1, w3, w2, shard_acts: bool = True):
+    """x: (..., M); w1/w3: (M, F); w2: (F, M)."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    if shard_acts:
+        h = constrain(h, "batch", "seq", "act_ff")
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based dispatch with capacity (token-dropping, GShard semantics,
+# but gather/scatter instead of the (S,E,C) one-hot monster)
+# ---------------------------------------------------------------------------
+def moe_ffn(x, router_w, we1, we3, we2, *, n_experts: int, top_k: int,
+            capacity: int, shard_acts: bool = True):
+    """x: (B, S, M) -> (B, S, M).
+
+    Routing is computed per batch row (one group per row, groups sharded over
+    the data axis so sorting never crosses shards).  Per group:
+      1. top-k experts per token, renormalized gate weights
+      2. assignments sorted by expert id; rank-within-expert = slot
+      3. slots >= capacity dropped (contribute zero, standard GShard drop)
+      4. gather tokens -> (E, C, M), expert SwiGLU, scatter-add back
+    """
+    b, s, m = x.shape
+    e, c, k = n_experts, capacity, top_k
+
+    logits = jnp.einsum("bsm,me->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
+    top_w, top_ids = jax.lax.top_k(gates, k)                    # (B,S,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    def route_one(xg, ids, w):
+        # xg: (S, M); ids/w: (S, k)
+        flat_ids = ids.reshape(-1)                              # (S*k,)
+        flat_w = w.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(s), k)                 # token index
+        order = jnp.argsort(flat_ids, stable=True)
+        sid = flat_ids[order]
+        stok = flat_tok[order]
+        sw = flat_w[order]
+        # rank within expert: position - first position of this expert id
+        seg_start = jnp.searchsorted(sid, jnp.arange(e), side="left")
+        slot = jnp.arange(s * k) - seg_start[sid]
+        valid = slot < c
+        slot_c = jnp.where(valid, slot, 0)
+        # dropped assignments scatter to expert id == e (out of bounds) so
+        # mode="drop" discards them instead of clobbering a real slot
+        scat_eid = jnp.where(valid, sid, e).astype(jnp.int32)
+        gather_idx = jnp.zeros((e, c), jnp.int32).at[
+            scat_eid, slot_c].set(stok.astype(jnp.int32), mode="drop")
+        slot_mask = jnp.zeros((e, c), jnp.float32).at[
+            scat_eid, slot_c].add(1.0, mode="drop")
+        slot_mask = jnp.minimum(slot_mask, 1.0)
+        slot_w = jnp.zeros((e, c), jnp.float32).at[
+            scat_eid, slot_c].add(sw, mode="drop")
+        xin = xg[gather_idx] * slot_mask[..., None].astype(xg.dtype)  # (E,C,M)
+        return xin, gather_idx, slot_w
+
+    xin, gidx, sw = jax.vmap(route_one)(x, top_ids, top_w)      # (B,E,C,M)...
+    if shard_acts:
+        xin = constrain(xin, "batch", "act_expert", None, None)
+    # expert SwiGLU: (B,E,C,M) x (E,M,F) — weights cast to the compute
+    # dtype like every other layer (uncast fp32 weights promoted the whole
+    # expert pipeline and its decode all-reduces to f32; §Perf mixtral it-4)
+    we1 = we1.astype(xin.dtype)
+    we3 = we3.astype(xin.dtype)
+    we2 = we2.astype(xin.dtype)
+    h = jax.nn.silu(jnp.einsum("becm,emf->becf", xin, we1))
+    h = h * jnp.einsum("becm,emf->becf", xin, we3)
+    if shard_acts:
+        h = constrain(h, "batch", "act_expert", None, "act_ff")
+    out = jnp.einsum("becf,efm->becm", h, we2)                  # (B,E,C,M)
+
+    def combine_one(out_g, gidx_g, w_g):
+        flat = (out_g * w_g[..., None].astype(out_g.dtype)).reshape(e * c, m)
+        return jnp.zeros((s, m), out_g.dtype).at[
+            gidx_g.reshape(-1)].add(flat)
+
+    y = jax.vmap(combine_one)(out, gidx, sw)                    # (B,S,M)
+    return y.astype(x.dtype)

@@ -1,0 +1,36 @@
+"""LM cross-entropy variants.
+
+``gather`` (baseline): take_along_axis over the vocab dim.  Under tensor-
+parallel vocab sharding XLA lowers the gather as an ALL-GATHER of the full
+(B, S, V) fp32 logits — ~30+ GiB/device of temp at llama3-8b train_4k.
+
+``onehot`` (optimized): gold logit = sum(logits * one_hot(targets)) and the
+logsumexp — both pure *reductions* over the sharded vocab dim, which GSPMD
+executes locally + a tiny (B, S) all-reduce.  The one-hot never
+materializes (XLA fuses iota==target select into the reduction).
+
+Both compute identical values (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_cross_entropy(logits: jax.Array, targets: jax.Array, *,
+                     onehot: bool = False,
+                     mask: jax.Array | None = None) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    if onehot:
+        v = logits.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        sel = (iota == targets[..., None].astype(jnp.int32))
+        gold = jnp.sum(jnp.where(sel, lf, 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(
+            lf, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

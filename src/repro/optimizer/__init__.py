@@ -1,0 +1,8 @@
+"""repro.optimizer — AdamW, LR schedules (cosine + MiniCPM's WSD), clipping."""
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedules import constant_lr, cosine_schedule, wsd_schedule
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "constant_lr", "cosine_schedule", "wsd_schedule",
+]

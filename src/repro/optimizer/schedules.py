@@ -1,0 +1,38 @@
+"""LR schedules: cosine (llama-style) and WSD (MiniCPM's warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    constant plateau, fast exponential-ish (here linear) decay tail."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay_prog = jnp.clip((step - warmup_steps - stable_steps) /
+                              max(decay_steps, 1), 0.0, 1.0)
+        decay = peak_lr * (1.0 - (1.0 - min_ratio) * decay_prog)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < warmup_steps + stable_steps,
+                                  peak_lr, decay))
+        return out
+    return f

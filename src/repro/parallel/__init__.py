@@ -1,0 +1,9 @@
+"""repro.parallel — mesh construction, sharding rules, compressed collectives."""
+from .sharding import (LOGICAL_RULES, ShardingCtx, constrain, current_ctx,
+                       logical_sharding, logical_spec, set_rules,
+                       use_sharding)
+
+__all__ = [
+    "LOGICAL_RULES", "ShardingCtx", "constrain", "current_ctx",
+    "logical_sharding", "logical_spec", "set_rules", "use_sharding",
+]

@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code names array dimensions with *logical* axes ("batch", "embed",
+"heads", ...).  A rule table maps logical axes to mesh axes; `logical_spec`
+resolves a shape + names into a `PartitionSpec`, silently dropping mesh axes
+that do not divide the dimension (uneven shardings are rejected by jax for
+explicit in/out shardings, and several assigned configs have odd dims: 25
+heads, 36 heads, vocab 92553 pre-padding).  This keeps every (arch x mesh)
+cell compilable; the §Perf hillclimb then tightens the rules for the cells
+that matter.
+
+The context (mesh + rules) is stored in a contextvar so model code can call
+``constrain(x, "batch", "seq", "embed")`` without threading a mesh handle
+through every function.  Outside a context, ``constrain`` is a no-op — the
+same model code runs single-device on CPU for smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes (in sharding-priority order)
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),      # global batch over pods x data
+    "seq": (),                     # sequence unsharded by default (SP opt-in)
+    "seq_shard": ("model",),       # opt-in sequence parallelism
+    "kv_seq": ("data", "model"),   # long-context KV/state sharding (batch=1)
+    "act_embed": (),               # activation d_model dim
+    "act_heads": ("model",),       # activation heads dim
+    "act_ff": ("model",),          # activation FFN hidden dim
+    "act_expert": ("model",),      # activation expert dim
+    # weights
+    "embed": ("data",),            # FSDP/ZeRO-3 dim of weight matrices
+    "heads": ("model",),           # TP: q heads
+    "kv_heads": ("model",),        # TP: kv heads
+    "ff": ("model",),              # TP: FFN hidden
+    "vocab": ("model",),           # TP: embedding/LM-head vocab dim
+    "expert": ("model",),          # EP: expert dim of MoE weights
+    "layers": (),                  # scanned layer dim: replicated
+    "conv": (),                    # small conv / misc dims
+    "state": (),                   # SSM state dim
+    "head_dim": (),
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh | None
+    rules: dict[str, tuple[str, ...]]
+
+    def axis_size(self, axis: str) -> int:
+        if self.mesh is None or axis not in self.mesh.shape:
+            return 1
+        return self.mesh.shape[axis]
+
+
+_CTX: contextvars.ContextVar[ShardingCtx | None] = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+def current_ctx() -> ShardingCtx | None:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh | None, rules: dict[str, tuple[str, ...]] | None = None):
+    """Install a sharding context (and enter the mesh) for model code."""
+    ctx = ShardingCtx(mesh=mesh, rules=dict(rules or LOGICAL_RULES))
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def set_rules(overrides: dict[str, tuple[str, ...]]) -> None:
+    """Mutate the *current* context's rules (hillclimb knob)."""
+    ctx = current_ctx()
+    if ctx is None:
+        raise RuntimeError("no active sharding context")
+    ctx.rules.update(overrides)
+
+
+def logical_spec(shape: Sequence[int], names: Sequence[str | None],
+                 ctx: ShardingCtx | None = None) -> P:
+    """Resolve logical names to a PartitionSpec, enforcing divisibility.
+
+    A dim gets the *largest prefix* of its rule's mesh axes whose product
+    divides the dim size; mesh axes already used by another dim are skipped
+    (PartitionSpec axes must be unique).
+    """
+    ctx = ctx or current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return P()
+    if len(shape) != len(names):
+        raise ValueError(f"shape {shape} vs names {names} length mismatch")
+    used: set[str] = set()
+    out: list = []
+    for dim, name in zip(shape, names):
+        if name is None:
+            out.append(None)
+            continue
+        axes = ctx.rules.get(name, ())
+        chosen: list[str] = []
+        prod = 1
+        for ax in axes:
+            size = ctx.axis_size(ax)
+            if size <= 1 or ax in used:
+                continue
+            if dim % (prod * size) == 0:
+                chosen.append(ax)
+                prod *= size
+            else:
+                break  # keep prefix-order semantics (pod before data, etc.)
+        for ax in chosen:
+            used.add(ax)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    # trim trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def logical_sharding(shape: Sequence[int], names: Sequence[str | None],
+                     ctx: ShardingCtx | None = None) -> NamedSharding | None:
+    ctx = ctx or current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, logical_spec(shape, names, ctx))
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """``with_sharding_constraint`` by logical names; no-op without a mesh."""
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = logical_spec(x.shape, names, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    """Round up (used for vocab padding so TP divides: paper-of-record
+    practice for odd vocab sizes like 92553)."""
+    return int(math.ceil(n / multiple) * multiple)

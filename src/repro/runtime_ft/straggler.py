@@ -1,0 +1,70 @@
+"""PTT-driven straggler detection.
+
+The paper's PTT records per-(worker, width) EWMA execution times and was
+designed to absorb "temporally added heterogeneity such as DVFS ... or even
+interference caused by ... background processes" (§3.1).  At fleet scale the
+same table is a straggler detector: a device group whose recorded time for a
+TAO type is a large multiple of the cross-fleet median is flagged, and the
+scheduler (or the elastic fleet manager) routes around it.
+
+Detection rule: worker w is a straggler for type T at width v when
+
+    t_w > max(ratio_threshold * median(t_*), median + z_threshold * MAD)
+
+using median/MAD (robust to the stragglers themselves polluting the stats).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.ptt import PTTRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerReport:
+    worker: int
+    tao_type: str
+    width: int
+    time: float
+    median: float
+    ratio: float
+
+
+class StragglerDetector:
+    def __init__(self, ptt: PTTRegistry, ratio_threshold: float = 2.0,
+                 z_threshold: float = 5.0, min_samples: int = 3):
+        self.ptt = ptt
+        self.ratio_threshold = ratio_threshold
+        self.z_threshold = z_threshold
+        self.min_samples = min_samples
+
+    def scan(self, width: int = 1) -> list[StragglerReport]:
+        reports: list[StragglerReport] = []
+        for tao_type in self.ptt.types():
+            table = self.ptt.table(tao_type)
+            spec = table.spec
+            times, workers = [], []
+            for w in range(spec.n_workers):
+                if table.samples(w, width) >= self.min_samples:
+                    times.append(table.time(w, width))
+                    workers.append(w)
+            if len(times) < 4:
+                continue
+            arr = np.asarray(times)
+            med = float(np.median(arr))
+            mad = float(np.median(np.abs(arr - med))) + 1e-12
+            for w, t in zip(workers, arr):
+                slow_ratio = t > self.ratio_threshold * med
+                slow_z = (t - med) / (1.4826 * mad) > self.z_threshold
+                if slow_ratio and slow_z:
+                    reports.append(StragglerReport(
+                        worker=w, tao_type=tao_type, width=width,
+                        time=float(t), median=med, ratio=float(t / med)))
+        return reports
+
+    def healthy_workers(self, width: int = 1) -> set[int]:
+        spec = self.ptt.spec
+        bad = {r.worker for r in self.scan(width)}
+        return set(range(spec.n_workers)) - bad

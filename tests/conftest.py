@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benches must see the 1 real CPU device (the 512-device mesh is the
+dry-run's private business)."""
+import os
+import sys
+
+# keep test runs deterministic & quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_seed() -> int:
+    return 0

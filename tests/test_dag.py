@@ -1,0 +1,88 @@
+"""TAO-DAG tests: criticality == longest path (property-tested against an
+independent longest-path computation), topological order, degree."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TAO, TaoDag, chain, paper_dags, random_dag
+
+
+def _longest_path_by_dp(dag: TaoDag) -> int:
+    """Independent longest-path (in nodes) via DP over topological order."""
+    dist = {}
+    for n in dag.topological():
+        dist[n] = 1 + max((dist[p] for p in n.parents), default=0)
+    return max(dist.values(), default=0)
+
+
+def test_chain_criticality_descends():
+    dag = TaoDag()
+    nodes = chain(dag, "matmul", 5)
+    dag.assign_criticality()
+    assert [n.criticality for n in nodes] == [5, 4, 3, 2, 1]
+
+
+def test_paper_figure3_example():
+    # Figure 3: a diamond-ish DAG where the entry of the longest path gets
+    # the highest criticality.
+    dag = TaoDag()
+    a = dag.add_task("k")            # -> b -> d -> e   (longest, len 4)
+    b = dag.add_task("k", deps=[a])
+    c = dag.add_task("k", deps=[a])  # short branch
+    d = dag.add_task("k", deps=[b])
+    e = dag.add_task("k", deps=[d, c])
+    dag.assign_criticality()
+    assert a.criticality == 4
+    assert b.criticality == 3
+    assert c.criticality == 2
+    assert d.criticality == 2
+    assert e.criticality == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1.0, 10.0), st.integers(20, 300))
+def test_criticality_equals_longest_path(seed, degree, n):
+    dag = random_dag(n_tasks=n, target_degree=degree, seed=seed)
+    assert dag.critical_path_length() == _longest_path_by_dp(dag)
+    # root of the longest path carries the max criticality
+    assert max(x.criticality for x in dag.nodes) == dag.critical_path_length()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1.0, 10.0))
+def test_random_dag_structure(seed, degree):
+    dag = random_dag(n_tasks=200, target_degree=degree, seed=seed)
+    dag.validate()
+    assert len(dag) == 200
+    # single-root-free but acyclic with roots/sinks present
+    assert dag.roots() and dag.sinks()
+    # kernel types are balanced to +-1
+    from collections import Counter
+    counts = Counter(n.type for n in dag.nodes)
+    assert max(counts.values()) - min(counts.values()) <= 1
+
+
+def test_parallelism_degree_matches_paper_targets():
+    dags = paper_dags(n_tasks=3000)
+    for target, dag in dags.items():
+        achieved = dag.parallelism_degree()
+        assert achieved == pytest.approx(target, rel=0.25), (
+            f"degree {achieved} too far from target {target}")
+
+
+def test_cycle_detection():
+    dag = TaoDag()
+    a = dag.add_task("k")
+    b = dag.add_task("k", deps=[a])
+    dag.add_edge(b, a)  # cycle
+    with pytest.raises(ValueError):
+        dag.topological()
+
+
+def test_reset_execution_state():
+    dag = TaoDag()
+    a = dag.add_task("k")
+    b = dag.add_task("k", deps=[a])
+    dag.reset_execution_state()
+    assert a.pending == 0 and b.pending == 1

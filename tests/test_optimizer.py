@@ -1,0 +1,68 @@
+"""Optimizer + schedule tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optimizer import (adamw_init, adamw_update, clip_by_global_norm,
+                             cosine_schedule, wsd_schedule)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.array([1.0, 2.0, 3.0])))
+
+    @jax.jit
+    def step(p, o):
+        g = jax.grad(loss_fn)(p)
+        return adamw_update(p, g, o, lr=0.1, weight_decay=0.0)
+
+    for _ in range(300):
+        params, opt = step(params, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               [1.0, 2.0, 3.0], atol=1e-2)
+
+
+def test_adamw_step_counter_and_moments_dtype():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    params, opt = adamw_update(params, g, opt, lr=1e-2)
+    assert int(opt.step) == 1
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 3.0), "b": jnp.full((4,), 4.0)}
+    norm = float(jnp.sqrt(3 * 9 + 4 * 16))
+    clipped, got_norm = clip_by_global_norm(g, 1.0)
+    assert got_norm == pytest.approx(norm, rel=1e-5)
+    total = np.sqrt(sum(float(jnp.sum(jnp.square(x)))
+                        for x in jax.tree.leaves(clipped)))
+    assert total == pytest.approx(1.0, rel=1e-4)
+    # under the cap: untouched
+    same, _ = clip_by_global_norm(g, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g["a"]))
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == pytest.approx(1.0, abs=1e-6)
+    assert float(f(55)) < 1.0
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(1.0, warmup_steps=10, stable_steps=80, decay_steps=10)
+    assert float(f(5)) == pytest.approx(0.5)
+    # stable plateau
+    for s in (10, 40, 89):
+        assert float(f(s)) == pytest.approx(1.0)
+    # decay tail
+    assert float(f(95)) < 1.0
+    assert float(f(100)) == pytest.approx(0.01, abs=1e-6)

@@ -1,0 +1,159 @@
+"""Serve/train orchestrators: the paper's scheduler driving LM workloads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hikey960, make_policy
+from repro.core.serve_orchestrator import (ServeRequest, build_serving_dag,
+                                           run_serving_threaded,
+                                           simulate_serving)
+from repro.core.train_orchestrator import (build_training_dag,
+                                           run_training_threaded,
+                                           simulate_training)
+
+
+def _requests(n=20, seed=0):
+    import random
+    r = random.Random(seed)
+    return [ServeRequest(id=i, prompt_len=r.choice([512, 2048, 8192]),
+                         gen_len=r.choice([64, 128, 256]))
+            for i in range(n)]
+
+
+def test_serving_dag_structure():
+    reqs = [ServeRequest(0, 2048, 128), ServeRequest(1, 512, 64)]
+    dag = build_serving_dag(reqs)
+    # prefill roots, decode chains
+    assert len(dag.roots()) == 2
+    types = {n.type for n in dag.nodes}
+    assert types == {"prefill", "decode"}
+    assert len(dag.sinks()) == 2
+
+
+def test_simulated_serving_policies_complete():
+    reqs = _requests(30)
+    for pol in ("homogeneous", "weight", "molding:weight"):
+        stats = simulate_serving(reqs, hikey960(), make_policy(pol), seed=0)
+        assert stats.sim.completed == len(stats.sim.trace)
+        assert stats.tokens_per_s > 0
+        assert stats.p99_latency >= stats.mean_latency
+
+
+def test_weight_policy_learns_prefill_big_decode_little():
+    """The paper's mechanism discovers disaggregated placement: after the
+    PTT warms up, prefill lands mostly on big groups, decode mostly LITTLE."""
+    spec = hikey960()
+    reqs = _requests(120, seed=1)
+    stats = simulate_serving(reqs, spec, make_policy("weight"), seed=1)
+    big, little = set(spec.big_workers), set(spec.little_workers)
+    place = {"prefill": [0, 0], "decode": [0, 0]}  # [on_big, on_little]
+    warm = [r for r in stats.sim.trace if r.start > stats.makespan * 0.3]
+    for rec in warm:
+        on_big = sum(1 for m in rec.participants if m in big)
+        on_little = len(rec.participants) - on_big
+        place[rec.type][0] += on_big
+        place[rec.type][1] += on_little
+    prefill_big_frac = place["prefill"][0] / max(sum(place["prefill"]), 1)
+    decode_big_frac = place["decode"][0] / max(sum(place["decode"]), 1)
+    assert prefill_big_frac > decode_big_frac, (
+        f"prefill big {prefill_big_frac:.2f} <= decode big "
+        f"{decode_big_frac:.2f}: bias not learned")
+
+
+def test_serving_threaded_with_real_model():
+    """End-to-end: tiny model, real jitted prefill/decode on the runtime."""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    cfg = get_smoke_config("llama3.2-1b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+    prefill_j = jax.jit(model.prefill)
+    decode_j = jax.jit(model.decode_step)
+    logits, cache0 = prefill_j(params, {"tokens": toks})  # warm compile
+    decode_j(params, toks[:, -1:], cache0)
+
+    def prefill_fn(r):
+        prefill_j(params, {"tokens": toks})
+
+    def decode_fn(r, i):
+        decode_j(params, toks[:, -1:], cache0)
+
+    reqs = _requests(6, seed=2)
+    out = run_serving_threaded(reqs, hikey960(), make_policy("molding:weight"),
+                               prefill_fn, decode_fn, timeout_s=120)
+    assert out["completed"] == sum(
+        1 + -(-r.gen_len // 64) for r in reqs)  # prefill + decode bursts
+
+
+def test_training_dag_structure():
+    dag = build_training_dag(n_steps=3, n_microbatches=4)
+    kinds = [n.type for n in dag.nodes]
+    assert kinds.count("fwdbwd") == 12
+    assert kinds.count("grad_reduce") == 3
+    assert kinds.count("opt_update") == 3
+    dag.assign_criticality()
+    # each step's opt_update gates the next step's microbatches
+    assert dag.critical_path_length() == 3 * 3
+
+
+def test_simulated_training_completes_at_scale():
+    from repro.core import fleet
+    res = simulate_training(n_steps=5, n_microbatches=64,
+                            spec=fleet(48, 16), policy=make_policy(
+                                "molding:crit-ptt"), seed=0)
+    assert res.completed == 5 * (64 + 2)
+
+
+def test_training_threaded_real_grads_match_sequential():
+    """The DAG-scheduled training must match plain sequential training."""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.optimizer import adamw_init, adamw_update
+
+    cfg = get_smoke_config("llama3.2-1b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    grad_j = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
+    def grad_fn(p, b):
+        return grad_j(p, b), {}
+
+    upd_j = jax.jit(lambda p, g, o: adamw_update(p, g, o, lr=1e-3))
+    def update_fn(p, g, o):
+        return upd_j(p, g, o)
+
+    def batches_for(seed):
+        out = []
+        for s in range(2):           # 2 steps
+            mbs = []
+            for m in range(3):       # 3 microbatches
+                t = jax.random.randint(jax.random.PRNGKey(seed + 10 * s + m),
+                                       (2, 17), 0, cfg.vocab_size)
+                mbs.append({"tokens": t[:, :-1], "targets": t[:, 1:]})
+            out.append(mbs)
+        return out
+
+    batches = batches_for(5)
+    stats = run_training_threaded(
+        hikey960(), make_policy("molding:crit-ptt"), params, opt,
+        grad_fn, update_fn, batches, timeout_s=300)
+
+    # sequential reference
+    p_ref, o_ref = params, opt
+    for mbs in batches:
+        grads = None
+        for mb in mbs:
+            g, _ = grad_fn(p_ref, mb)
+            grads = g if grads is None else jax.tree.map(
+                lambda a, b: a + b, grads, g)
+        grads = jax.tree.map(lambda g: g / len(mbs), grads)
+        p_ref, o_ref = update_fn(p_ref, grads, o_ref)
+
+    for a, b in zip(jax.tree.leaves(stats["params"]), jax.tree.leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)

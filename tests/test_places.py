@@ -1,0 +1,62 @@
+"""Unit + property tests for elastic places and the leader formula."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (BIG, LITTLE, ClusterSpec, hikey960, homogeneous,
+                        leader_of, place_members, valid_widths)
+
+
+def test_leader_formula_paper_example():
+    # paper §3.1: "if core number seven were to distribute a TAO with
+    # resource width four, then core number four would be chosen as leader"
+    assert leader_of(7, 4) == 4
+
+
+@given(st.integers(0, 4095), st.sampled_from([1, 2, 4, 8, 16]))
+def test_leader_is_aligned_and_leq_core(core, width):
+    lead = leader_of(core, width)
+    assert lead % width == 0
+    assert lead <= core < lead + width
+    # leaders are fixed points
+    assert leader_of(lead, width) == lead
+
+
+@given(st.integers(1, 10))
+def test_valid_widths_powers_of_two(k):
+    n = 2 ** k
+    ws = valid_widths(n)
+    assert ws[0] == 1 and ws[-1] == n
+    assert all(b == 2 * a for a, b in zip(ws, ws[1:]))
+
+
+def test_hikey960_topology():
+    spec = hikey960()
+    assert spec.n_workers == 8
+    assert len(spec.big_workers) == 4
+    assert len(spec.little_workers) == 4
+    assert set(spec.big_workers) | set(spec.little_workers) == set(range(8))
+    assert spec.widths == (1, 2, 4, 8)
+
+
+def test_eligible_leaders():
+    spec = hikey960()
+    assert spec.eligible_leaders(4) == (0, 4)
+    assert spec.eligible_leaders(8) == (0,)
+    assert spec.eligible_leaders(1) == tuple(range(8))
+
+
+def test_place_members():
+    assert list(place_members(4, 4)) == [4, 5, 6, 7]
+
+
+def test_clusters_contiguous():
+    spec = hikey960()
+    runs = spec.clusters()
+    assert len(runs) == 2
+    assert runs[0][0] == LITTLE and runs[1][0] == BIG
+
+
+def test_homogeneous():
+    spec = homogeneous(16)
+    assert spec.little_workers == ()
+    assert len(spec.big_workers) == 16

@@ -1,0 +1,129 @@
+"""Policy unit tests: weight thresholds, criticality routing, molding rules."""
+import random
+
+import pytest
+
+from repro.core import (BIG, LITTLE, TAO, ClusterSpec, CriticalityAwarePolicy,
+                        CriticalityPTTPolicy, HomogeneousPolicy, MoldingPolicy,
+                        Placement, WeightBasedPolicy, hikey960, leader_of,
+                        make_policy)
+from repro.core.scheduler import SchedulerCore
+
+
+class _Ctx(SchedulerCore):
+    """SchedulerCore with a settable load / running-max for unit tests."""
+
+    def __init__(self, spec, load=0, max_crit=0, seed=0):
+        super().__init__(spec, HomogeneousPolicy(), seed=seed)
+        self._load = load
+        self._max_crit = max_crit
+
+    def system_load(self):
+        return self._load
+
+    def running_max_criticality(self):
+        return self._max_crit
+
+
+def test_homogeneous_wakes_locally_with_hint():
+    ctx = _Ctx(hikey960())
+    tao = TAO(type="matmul", width_hint=4)
+    p = HomogeneousPolicy().place(tao, ctx, waker=3)
+    assert p == Placement(target=3, width=4)
+
+
+def test_crit_aware_routes_critical_to_big():
+    ctx = _Ctx(hikey960(), max_crit=10)
+    pol = CriticalityAwarePolicy()
+    crit = TAO(type="matmul", width_hint=1, criticality=10)
+    noncrit = TAO(type="matmul", width_hint=1, criticality=2)
+    for _ in range(20):
+        assert pol.place(crit, ctx, 0).target in ctx.spec.big_workers
+        assert pol.place(noncrit, ctx, 0).target in ctx.spec.little_workers
+
+
+def test_crit_ptt_uses_best_recorded_core():
+    ctx = _Ctx(hikey960(), max_crit=5)
+    pol = CriticalityPTTPolicy()
+    table = ctx.ptt.table("matmul")
+    for w in range(8):
+        table.record(w, 1, 10.0)
+    table.record(6, 1, 0.5)  # clearly fastest
+    tao = TAO(type="matmul", width_hint=1, criticality=9)
+    assert pol.place(tao, ctx, 0).target == 6
+
+
+def test_weight_policy_threshold_update():
+    # paper §3.2.2: thr0=1.5, thr <- (w + 6*thr)/7
+    ctx = _Ctx(hikey960())
+    pol = WeightBasedPolicy()
+    table = ctx.ptt.table("copy")
+    for w in ctx.spec.big_workers:
+        table.record(w, 1, 1.0)    # big time 1.0
+    for w in ctx.spec.little_workers:
+        table.record(w, 1, 3.0)    # little time 3.0 -> weight 3.0 > 1.5
+    tao = TAO(type="copy", width_hint=1)
+    p = pol.place(tao, ctx, 0)
+    assert p.target in ctx.spec.big_workers
+    assert pol.threshold == pytest.approx((3.0 + 6 * 1.5) / 7)
+
+
+def test_weight_policy_low_speedup_goes_little():
+    ctx = _Ctx(hikey960())
+    pol = WeightBasedPolicy()
+    table = ctx.ptt.table("sort")
+    for w in ctx.spec.big_workers:
+        table.record(w, 1, 1.0)
+    for w in ctx.spec.little_workers:
+        table.record(w, 1, 1.1)    # weight 1.1 < 1.5 threshold
+    tao = TAO(type="sort", width_hint=1)
+    assert pol.place(tao, ctx, 0).target in ctx.spec.little_workers
+
+
+def test_weight_policy_explores_untried_cluster():
+    ctx = _Ctx(hikey960())
+    pol = WeightBasedPolicy()
+    table = ctx.ptt.table("copy")
+    for w in ctx.spec.big_workers:
+        table.record(w, 1, 1.0)
+    # little untried -> must be explored
+    tao = TAO(type="copy", width_hint=1)
+    assert pol.place(tao, ctx, 0).target in ctx.spec.little_workers
+
+
+def test_molding_load_based_widens_when_idle():
+    ctx = _Ctx(hikey960(), load=1)          # idle system, 8 workers
+    pol = MoldingPolicy(HomogeneousPolicy())
+    tao = TAO(type="matmul", width_hint=1)
+    p = pol.place(tao, ctx, 0)
+    assert p.width == 8                      # fair share 8//1
+
+
+def test_molding_load_based_respects_busy_system():
+    ctx = _Ctx(hikey960(), load=16)          # saturated
+    pol = MoldingPolicy(HomogeneousPolicy())
+    tao = TAO(type="matmul", width_hint=2)
+    # history empty for width 2 -> keeps exploring current width
+    assert pol.place(tao, ctx, 0).width == 2
+
+
+def test_molding_history_rule_time_times_width():
+    # paper §3.3: adopt w iff time[w]*w < time[cur]
+    ctx = _Ctx(hikey960(), load=100)
+    pol = MoldingPolicy(HomogeneousPolicy())
+    table = ctx.ptt.table("matmul")
+    # fill all widths for leader 0 so nothing is "untried"
+    table.record(0, 1, 8.0)     # cost 8
+    table.record(0, 2, 3.0)     # cost 6 -> beats t[1]=8
+    table.record(0, 4, 2.5)     # cost 10
+    table.record(0, 8, 2.0)     # cost 16
+    tao = TAO(type="matmul", width_hint=1)
+    p = pol.place(tao, ctx, waker=0)
+    assert p.width == 2
+
+
+def test_make_policy_registry():
+    for name in ("homogeneous", "crit-aware", "crit-ptt", "weight",
+                 "molding:weight", "molding:crit-ptt"):
+        pol = make_policy(name)
+        assert pol.name.startswith(name.split(":")[0]) or "molding" in pol.name

@@ -1,0 +1,106 @@
+"""PTT tests: the 1:4 EWMA, zero-init exploration, leader-row queries."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import PTT, PTTRegistry, hikey960
+
+
+def test_first_record_not_averaged_with_zero_init():
+    # zero means "untried", so the first sample must land unattenuated
+    t = PTT(hikey960())
+    t.record(0, 1, 10.0)
+    assert t.time(0, 1) == 10.0
+
+
+def test_ewma_1_to_4():
+    # paper §3.1: saved = (4*old + new) / 5
+    t = PTT(hikey960())
+    t.record(2, 2, 10.0)
+    t.record(2, 2, 20.0)
+    assert t.time(2, 2) == pytest.approx((4 * 10.0 + 20.0) / 5)
+    t.record(2, 2, 5.0)
+    assert t.time(2, 2) == pytest.approx((4 * 12.0 + 5.0) / 5)
+
+
+@given(st.lists(st.floats(1e-6, 1e6), min_size=1, max_size=50))
+def test_ewma_bounded_by_extremes(samples):
+    t = PTT(hikey960())
+    for s in samples:
+        t.record(1, 1, s)
+    assert min(samples) - 1e-9 <= t.time(1, 1) <= max(samples) + 1e-9
+
+
+def test_untried_explored_first():
+    t = PTT(hikey960())
+    t.record(0, 1, 5.0)
+    # other workers untried -> best_leader returns an untried one (time 0)
+    leader, time = t.best_leader(1)
+    assert time == 0.0 and leader != 0
+    # record everything; now the best recorded wins
+    for w in range(8):
+        t.record(w, 1, 10.0 - w)
+    leader, time = t.best_leader(1)
+    assert leader == 7 and time == pytest.approx(3.0)
+
+
+def test_best_leader_respects_alignment():
+    t = PTT(hikey960())
+    for w in (0, 4):
+        t.record(w, 4, 1.0 + w)
+    leader, _ = t.best_leader(4)
+    assert leader in (0, 4)
+
+
+def test_best_width_resource_efficiency():
+    # paper §3.3: pick width minimizing time*width
+    t = PTT(hikey960())
+    t.record(0, 1, 8.0)   # cost 8
+    t.record(0, 2, 3.0)   # cost 6  <- best
+    t.record(0, 4, 2.5)   # cost 10
+    t.record(0, 8, 1.5)   # cost 12
+    w, cost = t.best_width(0)
+    assert w == 2 and cost == pytest.approx(6.0)
+
+
+def test_best_width_explores_untried():
+    t = PTT(hikey960())
+    t.record(0, 1, 8.0)
+    w, cost = t.best_width(0)
+    assert cost == 0.0 and w != 1  # untried width surfaces first
+
+
+def test_non_leader_width_rows_excluded():
+    t = PTT(hikey960())
+    # worker 2 cannot lead width-4 or width-8 places
+    w, _ = t.best_width(2)
+    assert w in (1, 2)
+
+
+def test_rejects_bad_elapsed():
+    t = PTT(hikey960())
+    with pytest.raises(ValueError):
+        t.record(0, 1, float("nan"))
+    with pytest.raises(ValueError):
+        t.record(0, 1, -1.0)
+
+
+def test_registry_one_table_per_type():
+    reg = PTTRegistry(hikey960())
+    a = reg.table("matmul")
+    b = reg.table("sort")
+    assert a is not b
+    assert reg.table("matmul") is a
+    assert set(reg.types()) == {"matmul", "sort"}
+
+
+def test_cluster_time_means_only_recorded():
+    spec = hikey960()
+    t = PTT(spec)
+    bigs = spec.big_workers
+    t.record(bigs[0], 1, 2.0)
+    t.record(bigs[1], 1, 4.0)
+    assert t.cluster_time(bigs, 1) == pytest.approx(3.0)
+    assert t.cluster_time(spec.little_workers, 1) == 0.0

@@ -1,0 +1,103 @@
+"""System-level scheduler invariants, property-tested over random DAGs and
+every policy: each TAO executes exactly once, no deadlock, widths/leaders
+legal, makespan bounded below by the critical path, PTT written only at
+leader rows."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALL_POLICY_NAMES, ClusterSpec, Simulator, hikey960,
+                        leader_of, make_policy, random_dag)
+
+POLICIES = list(ALL_POLICY_NAMES)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    degree=st.floats(1.0, 9.0),
+    policy=st.sampled_from(POLICIES),
+    width_hint=st.sampled_from([1, 2, 4]),
+)
+def test_every_tao_runs_exactly_once(seed, degree, policy, width_hint):
+    dag = random_dag(n_tasks=120, target_degree=degree, seed=seed,
+                     width_hint=width_hint)
+    sim = Simulator(hikey960(), make_policy(policy), seed=seed)
+    res = sim.run(dag, max_events=100_000)
+    assert res.completed == 120
+    ran = [rec.tao_id for rec in res.trace]
+    assert len(ran) == len(set(ran)) == 120
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), policy=st.sampled_from(POLICIES))
+def test_widths_and_leaders_legal(seed, policy):
+    spec = hikey960()
+    dag = random_dag(n_tasks=100, target_degree=3.0, seed=seed, width_hint=2)
+    sim = Simulator(spec, make_policy(policy), seed=seed)
+    res = sim.run(dag)
+    for rec in res.trace:
+        assert rec.width in spec.widths
+        assert leader_of(rec.leader, rec.width) == rec.leader
+        assert all(0 <= m < spec.n_workers for m in rec.participants)
+        assert rec.end >= rec.start
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), policy=st.sampled_from(POLICIES))
+def test_dependencies_respected(seed, policy):
+    dag = random_dag(n_tasks=80, target_degree=2.0, seed=seed)
+    sim = Simulator(hikey960(), make_policy(policy), seed=seed)
+    res = sim.run(dag)
+    start = {rec.tao_id: rec.start for rec in res.trace}
+    end = {rec.tao_id: rec.end for rec in res.trace}
+    for node in dag.nodes:
+        for child in node.children:
+            assert start[child.id] >= end[node.id] - 1e-9, (
+                f"child {child.id} started before parent {node.id} finished")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), policy=st.sampled_from(POLICIES))
+def test_makespan_at_least_critical_path_bound(seed, policy):
+    """Lower bound: Cp x (fastest possible single-TAO time)."""
+    dag = random_dag(n_tasks=100, target_degree=2.0, seed=seed)
+    cp = dag.critical_path_length()
+    sim = Simulator(hikey960(), make_policy(policy), seed=seed)
+    res = sim.run(dag)
+    # fastest conceivable TAO: all 8 workers, best speed 2.5, eff 1.0
+    t_min = 0.010 / (8 * 2.5)
+    assert res.makespan >= cp * t_min
+
+
+def test_deterministic_given_seed():
+    dag_factory = lambda: random_dag(n_tasks=150, target_degree=3.0, seed=7)
+    r1 = Simulator(hikey960(), make_policy("molding:weight"), seed=3).run(
+        dag_factory())
+    r2 = Simulator(hikey960(), make_policy("molding:weight"), seed=3).run(
+        dag_factory())
+    assert r1.makespan == r2.makespan
+    assert [t.tao_id for t in r1.trace] == [t.tao_id for t in r2.trace]
+
+
+def test_ptt_rows_written_only_for_eligible_leaders():
+    dag = random_dag(n_tasks=200, target_degree=3.0, seed=5, width_hint=4)
+    sim = Simulator(hikey960(), make_policy("homogeneous"), seed=5)
+    sim.run(dag)
+    for t in sim.core.ptt.types():
+        table = sim.core.ptt.table(t)
+        for w in range(8):
+            for width in (1, 2, 4, 8):
+                if table.samples(w, width) > 0:
+                    assert leader_of(w, width) == w
+
+
+def test_scales_to_large_worker_counts():
+    """1000+ worker fleet: the simulator is how we exercise fleet scale."""
+    from repro.core import fleet
+    spec = fleet(n_big_groups=512, n_little_groups=512)
+    dag = random_dag(n_tasks=2000, target_degree=64.0, seed=1)
+    sim = Simulator(spec, make_policy("molding:weight"), seed=1)
+    res = sim.run(dag)
+    assert res.completed == 2000
+    assert res.makespan > 0

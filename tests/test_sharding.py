@@ -1,0 +1,70 @@
+"""Logical-axis sharding rules: divisibility fallback, axis dedup, padding."""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (LOGICAL_RULES, ShardingCtx, logical_spec,
+                                     pad_to_multiple, use_sharding)
+
+
+def _fake_ctx(shape: dict, rules=None) -> ShardingCtx:
+    """A ShardingCtx over a fake mesh (tests run on 1 real device)."""
+    mesh = SimpleNamespace(shape=shape)
+    return ShardingCtx(mesh=mesh, rules=dict(rules or LOGICAL_RULES))
+
+
+def test_divisible_dims_get_sharded():
+    ctx = _fake_ctx({"pod": 2, "data": 16, "model": 16})
+    spec = logical_spec((256, 4096), ("batch", "seq"), ctx)
+    assert spec == P(("pod", "data"))
+
+
+def test_indivisible_dim_dropped():
+    ctx = _fake_ctx({"data": 16, "model": 16})
+    # 25 heads % 16 != 0 -> heads dim unsharded
+    spec = logical_spec((4096, 25), ("embed", "heads"), ctx)
+    assert spec == P("data")
+
+
+def test_prefix_order_partial_shard():
+    ctx = _fake_ctx({"pod": 2, "data": 16, "model": 16})
+    # batch 32: divisible by pod(2) and pod*data(32) -> both axes
+    assert logical_spec((32,), ("batch",), ctx) == P(("pod", "data"))
+    # batch 8: divisible by pod(2), then pod*data=32 doesn't divide -> pod only
+    assert logical_spec((8,), ("batch",), ctx) == P("pod")
+
+
+def test_axis_never_reused_across_dims():
+    ctx = _fake_ctx({"data": 16, "model": 16})
+    # expert wants model, ff wants model: only the first gets it
+    spec = logical_spec((64, 2048, 1408), ("expert", "embed", "ff"), ctx)
+    assert spec == P("model", "data")
+
+
+def test_no_mesh_means_no_spec():
+    assert logical_spec((8, 8), ("batch", "embed"),
+                        ShardingCtx(mesh=None, rules={})) == P()
+
+
+def test_use_sharding_context_manager():
+    from repro.parallel.sharding import current_ctx
+    assert current_ctx() is None
+    with use_sharding(None):
+        assert current_ctx() is not None
+    assert current_ctx() is None
+
+
+@pytest.mark.parametrize("n,mult,want", [
+    (92553, 256, 92672), (128256, 256, 128256), (1, 8, 8), (504, 8, 504)])
+def test_pad_to_multiple(n, mult, want):
+    assert pad_to_multiple(n, mult) == want
+
+
+def test_padded_vocab_divisibility_for_all_archs():
+    """Every arch's padded vocab must shard over model=16."""
+    from repro.configs import ARCH_IDS, get_config
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 16 == 0 or cfg.vocab_pad_multiple < 16, arch
+        assert cfg.padded_vocab >= cfg.vocab_size

@@ -1,0 +1,116 @@
+"""Paper-validation tests on the calibrated simulator: the qualitative (and
+roughly quantitative) claims of §4-§5 must hold on the HiKey960-like pool."""
+import pytest
+
+from repro.core import (BIG, LITTLE, Simulator, TaoDag, chain, hikey960,
+                        make_policy, paper_dags, random_dag,
+                        paper_kernel_models)
+
+
+def _throughput(policy, dag_factory, seed=0):
+    sim = Simulator(hikey960(), make_policy(policy), seed=seed)
+    return sim.run(dag_factory()).throughput
+
+
+def test_fig4_matmul_scales_sort_saturates():
+    """Kernel model sanity vs Fig 4: matmul scales ~linearly with width;
+    sort does not; copy barely gains from width on big cores."""
+    models = paper_kernel_models()
+    m, s, c = models["matmul"], models["sort"], models["copy"]
+    assert m.eff(4) > 0.9
+    assert s.eff(4) < 0.6
+    assert m.speed[BIG] / m.speed[LITTLE] == pytest.approx(2.4)
+    # a single big core nearly saturates the stream BW pool
+    assert c.bw_cap[BIG] / c.speed[BIG] < 1.5
+
+
+def test_low_parallelism_dag_molding_speedup():
+    """Paper §5.1 (deg 1.62): molding ~2.78x over homogeneous width-1."""
+    factory = lambda: random_dag(3000, target_degree=1.62, seed=0,
+                                 width_hint=1)
+    base = _throughput("homogeneous", factory)
+    mold = _throughput("molding:crit-ptt", factory)
+    speedup = mold / base
+    assert speedup > 2.0, f"expected ~2.78x, got {speedup:.2f}x"
+
+
+def test_high_parallelism_dag_modest_gain():
+    """Paper §5.1 (deg 8.06): width-1 homogeneous already keeps cores busy;
+    molding gains are modest (~1.1x) but non-negative."""
+    factory = lambda: random_dag(3000, target_degree=8.06, seed=2,
+                                 width_hint=1)
+    base = _throughput("homogeneous", factory)
+    mold = _throughput("molding:weight", factory)
+    speedup = mold / base
+    assert 0.95 < speedup < 1.6, f"got {speedup:.2f}x"
+
+
+def test_criticality_beats_homogeneous_on_serial_dag():
+    """Paper: crit-aware ~1.19x over homogeneous width-1 at deg 1.62."""
+    factory = lambda: random_dag(3000, target_degree=1.62, seed=1,
+                                 width_hint=1)
+    base = _throughput("homogeneous", factory)
+    crit = _throughput("crit-aware", factory)
+    assert crit / base > 1.05
+
+
+def test_criticality_effect_shrinks_with_parallelism():
+    """Paper §5.1: 'DAGs with higher degrees of parallelism are less
+    sensitive to the critical path'."""
+    gain = {}
+    for deg in (1.62, 8.06):
+        factory = lambda d=deg: random_dag(3000, target_degree=d, seed=3,
+                                           width_hint=1)
+        gain[deg] = (_throughput("crit-aware", factory) /
+                     _throughput("homogeneous", factory))
+    assert gain[1.62] > gain[8.06] - 0.05
+
+
+def test_big_faster_than_little_for_matmul_chain():
+    """Fig 4 top: matmul on big ~2.4x faster than LITTLE."""
+    spec = hikey960()
+    models = paper_kernel_models()
+
+    def run_on(worker_cls):
+        sim = Simulator(spec, make_policy("homogeneous"),
+                        kernel_models=models, seed=0)
+        dag = TaoDag()
+        chain(dag, "matmul", 50, width_hint=1)
+        # pin execution by failing the other cluster
+        for w in (spec.little_workers if worker_cls == BIG
+                  else spec.big_workers):
+            sim.fail_worker(w)
+        return sim.run(dag).makespan
+
+    t_little = run_on(LITTLE)
+    t_big = run_on(BIG)
+    assert t_little / t_big == pytest.approx(2.4, rel=0.05)
+
+
+def test_stream_interference_copy():
+    """Fig 4 bottom: concurrent copy TAOs on one cluster contend for BW."""
+    spec = hikey960()
+
+    def run_copies(n_parallel):
+        sim = Simulator(spec, make_policy("homogeneous"), seed=0)
+        for w in spec.little_workers:
+            sim.fail_worker(w)
+        dag = TaoDag()
+        for _ in range(n_parallel):
+            chain(dag, "copy", 10, width_hint=1)
+        return sim.run(dag).throughput
+
+    t1 = run_copies(1)
+    t4 = run_copies(4)
+    # 4 parallel chains on the big cluster cannot reach 4x throughput
+    assert t4 / t1 < 2.0
+
+
+def test_molding_tables_1_and_2_shape():
+    """Tables 1-2: molding helps at deg 8.06 (hint 1) and is ~neutral at
+    low degrees with hint 4."""
+    f_hi = lambda: random_dag(3000, target_degree=8.06, seed=4, width_hint=1)
+    for pol in ("weight", "crit-ptt"):
+        no_mold = _throughput(pol, f_hi)
+        mold = _throughput(f"molding:{pol}", f_hi)
+        assert mold / no_mold > 0.98, f"{pol}: molding regressed badly"
