@@ -130,6 +130,39 @@ def tables_molding(n_tasks: int = 3000) -> None:
 
 
 # ---------------------------------------------------------------------------
+# beyond-paper: concurrent multi-DAG workload stream (online arrivals)
+# ---------------------------------------------------------------------------
+def multi_dag_bench(n_dags: int = 16, n_tasks: int = 150,
+                    rate: float = 4.0) -> None:
+    """Rank every policy on a 64-worker online-arrival stream.
+
+    ``n_dags`` mixed-degree random DAGs arrive as a Poisson process over a
+    fleet(48, 16) pool; the metric is per-DAG sojourn (completion - arrival),
+    reported as mean (us_per_call column) plus p50/p99 in the derived column.
+    """
+    from repro.core import (ALL_POLICY_NAMES, Simulator, fleet, make_policy,
+                            random_workload)
+
+    spec = fleet(48, 16)          # 64 workers: 48 big + 16 LITTLE groups
+    ranking = []
+    for policy in ALL_POLICY_NAMES:
+        wl = random_workload(n_dags=n_dags, rate=rate, n_tasks=n_tasks,
+                             seed=0)
+        sim = Simulator(spec, make_policy(policy), seed=1)
+        res = sim.run_workload(wl)
+        assert res.completed == wl.total_taos()
+        p50, p99 = res.sojourn_p50(), res.sojourn_p99()
+        emit(f"multidag.fleet64.{policy}",
+             res.mean_sojourn() * 1e6,
+             f"p50={p50:.4f}s;p99={p99:.4f}s;"
+             f"makespan={res.makespan:.4f}s;util={res.utilization:.3f}")
+        ranking.append((p50, p99, policy))
+    for i, (p50, p99, policy) in enumerate(sorted(ranking), 1):
+        print(f"# multidag rank {i}: {policy} "
+              f"(p50={p50:.4f}s, p99={p99:.4f}s)", flush=True)
+
+
+# ---------------------------------------------------------------------------
 # beyond-paper: serving + training orchestrators
 # ---------------------------------------------------------------------------
 def serve_bench() -> None:
@@ -195,22 +228,53 @@ def roofline(dryrun_dir: str = "experiments/dryrun/single_pod") -> None:
 
 
 # ---------------------------------------------------------------------------
+SECTIONS = ("all", "fig4", "fig6", "tab", "multi-dag", "multidag", "serve",
+            "train", "roofline")
+
+
 def main() -> None:
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    # Selectors: positional section names and/or `--workload <name>`
+    # (`run.py --workload multi-dag` is the documented stream-bench entry);
+    # all selected sections run, unknown names abort with the valid list.
+    args = sys.argv[1:]
+    selected: list[str] = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--workload":
+            i += 1
+            if i >= len(args):
+                sys.exit("--workload needs a value (e.g. --workload multi-dag)")
+            selected.append(args[i])
+        elif args[i].startswith("--workload="):
+            selected.append(args[i].split("=", 1)[1])
+        else:
+            selected.append(args[i])
+        i += 1
+    unknown = [s for s in selected if s not in SECTIONS]
+    if unknown:
+        sys.exit(f"unknown section(s): {', '.join(unknown)} "
+                 f"(choose from: {', '.join(SECTIONS)})")
+    which = set(selected) or {"all"}
+
+    def sel(*names: str) -> bool:
+        return bool(which & ({"all"} | set(names)))
+
     print("name,us_per_call,derived")
     t0 = time.time()
-    if which in ("all", "fig4"):
+    if sel("fig4"):
         fig4_kernel_profile()
         fig4_real_kernels()
-    if which in ("all", "fig6"):
+    if sel("fig6"):
         fig6_random_dags()
-    if which in ("all", "tab"):
+    if sel("tab"):
         tables_molding()
-    if which in ("all", "serve"):
+    if sel("multi-dag", "multidag"):
+        multi_dag_bench()
+    if sel("serve"):
         serve_bench()
-    if which in ("all", "train"):
+    if sel("train"):
         train_bench()
-    if which in ("all", "roofline"):
+    if sel("roofline"):
         roofline()
     print(f"# total {time.time() - t0:.1f}s", flush=True)
 

@@ -2,25 +2,31 @@
 scheduling with a Performance Trace Table, criticality / weight-based
 placement and task molding (Rohlin, Fahlgren, Pericàs — HIP3ES 2019)."""
 from .dag import TAO, TaoDag, chain
-from .dag_gen import KERNEL_TYPES, paper_dags, random_dag
+from .dag_gen import KERNEL_TYPES, paper_dags, random_dag, random_workload
 from .places import (BIG, LITTLE, ClusterSpec, fleet, hikey960, homogeneous,
                      leader_of, place_members, valid_widths)
-from .policies import (ALL_POLICY_NAMES, CriticalityAwarePolicy,
-                       CriticalityPTTPolicy, HomogeneousPolicy, MoldingPolicy,
-                       Placement, Policy, WeightBasedPolicy, make_policy)
+from .policies import (ALL_POLICY_NAMES, AdaptivePolicy,
+                       CriticalityAwarePolicy, CriticalityPTTPolicy,
+                       HomogeneousPolicy, MoldingPolicy, Placement, Policy,
+                       WeightBasedPolicy, make_policy)
 from .ptt import PTT, PTTRegistry
 from .runtime import ChunkedWork, ThreadedRuntime
 from .scheduler import SchedulerCore
 from .simulator import (KernelModel, SimResult, Simulator,
                         paper_kernel_models, run_policy)
+from .workload import (DagArrival, DagStats, Workload, WorkloadResult,
+                       percentile)
 
 __all__ = [
     "TAO", "TaoDag", "chain", "KERNEL_TYPES", "paper_dags", "random_dag",
+    "random_workload",
     "BIG", "LITTLE", "ClusterSpec", "fleet", "hikey960", "homogeneous",
     "leader_of", "place_members", "valid_widths",
-    "ALL_POLICY_NAMES", "CriticalityAwarePolicy", "CriticalityPTTPolicy",
-    "HomogeneousPolicy", "MoldingPolicy", "Placement", "Policy",
-    "WeightBasedPolicy", "make_policy", "PTT", "PTTRegistry",
-    "ChunkedWork", "ThreadedRuntime", "SchedulerCore",
-    "KernelModel", "SimResult", "Simulator", "paper_kernel_models", "run_policy",
+    "ALL_POLICY_NAMES", "AdaptivePolicy", "CriticalityAwarePolicy",
+    "CriticalityPTTPolicy", "HomogeneousPolicy", "MoldingPolicy",
+    "Placement", "Policy", "WeightBasedPolicy", "make_policy",
+    "PTT", "PTTRegistry", "ChunkedWork", "ThreadedRuntime", "SchedulerCore",
+    "KernelModel", "SimResult", "Simulator", "paper_kernel_models",
+    "run_policy",
+    "DagArrival", "DagStats", "Workload", "WorkloadResult", "percentile",
 ]

@@ -36,6 +36,10 @@ class TAO:
     pending: int = 0          # unfinished parents (runtime decrements)
     assigned_width: int = 0   # width chosen at wake-up (0 = not yet scheduled)
     assigned_leader: int = -1
+    # multi-tenant: which admitted DAG this node belongs to.  Criticality is
+    # only comparable within one DAG, so the scheduler keeps one criticality
+    # namespace per dag_id (0 = the legacy single-DAG namespace).
+    dag_id: int = 0
 
     def __hash__(self) -> int:  # identity hash: TAOs are unique nodes
         return id(self)

@@ -98,3 +98,39 @@ def paper_dags(n_tasks: int = 3000, width_hint: int = 1, seed: int = 0):
         3.03: random_dag(n_tasks, target_degree=3.03, seed=seed + 1, width_hint=width_hint),
         8.06: random_dag(n_tasks, target_degree=8.06, seed=seed + 2, width_hint=width_hint),
     }
+
+
+def random_workload(
+    n_dags: int = 8,
+    rate: float = 2.0,
+    n_tasks: int = 150,
+    degrees: Sequence[float] = (1.62, 3.03, 8.06),
+    kernel_types: Sequence[str] = KERNEL_TYPES,
+    seed: int = 0,
+    width_hint: int = 1,
+):
+    """A multi-tenant arrival stream of mixed random DAGs.
+
+    ``n_dags`` Topcuoglu-style DAGs of ``n_tasks`` nodes each, with
+    parallelism degrees drawn uniformly from ``degrees``, arriving as a
+    Poisson process of ``rate`` DAGs/s (first DAG at t=0).  Each DAG gets an
+    independent structure seed, so the stream mixes serial and parallel
+    tenants the way a shared pool would see them.
+    """
+    from .workload import Workload
+
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    rng = random.Random(seed)
+    wl = Workload()
+    t = 0.0
+    # label with the dag_id the fresh Workload will assign (sequential from
+    # 1) so names, per_dag keys and TraceRecord.dag_id line up in reports
+    for i in range(1, n_dags + 1):
+        degree = rng.choice(list(degrees))
+        dag = random_dag(n_tasks, target_degree=degree,
+                         kernel_types=kernel_types,
+                         seed=rng.randrange(2 ** 31), width_hint=width_hint)
+        wl.add(dag, at=t, name=f"dag{i}(deg={degree})")
+        t += rng.expovariate(rate)
+    return wl

@@ -49,8 +49,9 @@ class SchedulerContext(Protocol):
         """Number of ready + running TAOs (the molding load signal)."""
         ...
 
-    def running_max_criticality(self) -> int:
-        """Maximum criticality among currently scheduled, unfinished TAOs."""
+    def running_max_criticality(self, namespace: int = 0) -> int:
+        """Maximum criticality among currently scheduled, unfinished TAOs of
+        one DAG namespace (criticalities are only comparable within a DAG)."""
         ...
 
 
@@ -81,8 +82,10 @@ class HomogeneousPolicy(Policy):
 # ---------------------------------------------------------------------------
 def _is_critical(tao: TAO, ctx: SchedulerContext) -> bool:
     """Compare against the max criticality currently in flight (atomic var in
-    the C++ original; the runtime keeps an equivalent multiset)."""
-    return tao.criticality >= ctx.running_max_criticality()
+    the C++ original; the runtime keeps an equivalent multiset).  The
+    comparison is namespaced per DAG: under a concurrent multi-DAG workload a
+    tenant's critical path is judged against its own TAOs only."""
+    return tao.criticality >= ctx.running_max_criticality(tao.dag_id)
 
 
 class CriticalityAwarePolicy(Policy):
@@ -134,6 +137,17 @@ class WeightBasedPolicy(Policy):
     def reset(self) -> None:
         self.threshold = self.INITIAL_THRESHOLD
 
+    # -- threshold storage / decision hooks (AdaptivePolicy overrides) ------
+    def _threshold(self, tao: TAO) -> float:
+        return self.threshold
+
+    def _store_threshold(self, tao: TAO, value: float) -> None:
+        self.threshold = value
+
+    def _goes_big(self, tao: TAO, ctx: SchedulerContext, weight: float,
+                  threshold: float) -> bool:
+        return weight > threshold
+
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
         width = tao.width_hint
         spec = ctx.spec
@@ -143,6 +157,18 @@ class WeightBasedPolicy(Policy):
         table = ctx.ptt.table(tao.type)
         t_big = table.cluster_time(bigs, width)
         t_little = table.cluster_time(littles, width)
+        if t_big == 0.0 and t_little == 0.0:
+            # Under a molding wrapper the PTT only ever records the *molded*
+            # widths, so the hinted width's rows can stay at zero forever —
+            # fall back to the first width with data for both clusters
+            # (the t_LITTLE/t_big speed ratio is what matters, not the
+            # absolute times at the hinted width).
+            for w in spec.widths:
+                tb = table.cluster_time(bigs, w)
+                tl = table.cluster_time(littles, w)
+                if tb > 0.0 and tl > 0.0:
+                    t_big, t_little = tb, tl
+                    break
         # zero-init exploration: measure the untried cluster first
         if t_big == 0.0 and t_little == 0.0:
             pool = bigs if ctx.rng.random() < 0.5 else littles
@@ -152,13 +178,59 @@ class WeightBasedPolicy(Policy):
         if t_little == 0.0:
             return Placement(target=ctx.rng.choice(littles), width=width)
         weight = t_little / t_big
-        goes_big = weight > self.threshold
+        threshold = self._threshold(tao)
+        goes_big = self._goes_big(tao, ctx, weight, threshold)
         # adaptive threshold: EWMA 1:6 toward the mean weight of the system
-        self.threshold = (weight + self.OLD_WEIGHT * self.threshold) / (
+        self._store_threshold(tao, (weight + self.OLD_WEIGHT * threshold) / (
             self.OLD_WEIGHT + 1
-        )
+        ))
         pool = bigs if goes_big else littles
         return Placement(target=ctx.rng.choice(pool), width=width)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive per-type thresholds (arXiv:1905.00673-style)
+# ---------------------------------------------------------------------------
+class AdaptivePolicy(WeightBasedPolicy):
+    """Weight-based placement with *per-type* adaptive thresholds.
+
+    ``WeightBasedPolicy`` keeps one global EWMA threshold, so under a mixed
+    stream every kernel class is compared against the mixture mean: a copy
+    TAO arriving after a burst of matmuls sees a threshold dragged up by
+    matmul weights.  The adaptive follow-up (arXiv:1905.00673) keeps the
+    comparison *per task type* — each type's threshold tracks the EWMA of
+    that type's own weights, so the big/LITTLE split adapts independently
+    per class as load and interference drift.
+
+    Two changes over the single-threshold policy (the placement protocol —
+    exploration, EWMA blend — is inherited):
+
+    * ``thresholds[type]`` — independent EWMA (same 1:6 blend, same 1.5
+      init) per TAO type.
+    * criticality boost — a TAO on its DAG's critical path with weight >= 1
+      (big is at least as fast) goes big even below threshold, folding the
+      §3.2.1 criticality signal into the weight decision.
+    """
+
+    name = "adaptive"
+
+    def __init__(self) -> None:
+        super().__init__()   # keep the base `threshold` attribute contract
+        self.thresholds: dict[str, float] = {}
+
+    def reset(self) -> None:
+        super().reset()
+        self.thresholds.clear()
+
+    def _threshold(self, tao: TAO) -> float:
+        return self.thresholds.get(tao.type, self.INITIAL_THRESHOLD)
+
+    def _store_threshold(self, tao: TAO, value: float) -> None:
+        self.thresholds[tao.type] = value
+
+    def _goes_big(self, tao: TAO, ctx: SchedulerContext, weight: float,
+                  threshold: float) -> bool:
+        return weight > threshold or (weight >= 1.0 and _is_critical(tao, ctx))
 
 
 # ---------------------------------------------------------------------------
@@ -234,8 +306,8 @@ class MoldingPolicy(Policy):
 # registry used by benchmarks / CLI
 # ---------------------------------------------------------------------------
 def make_policy(name: str) -> Policy:
-    """Factory: 'homogeneous', 'crit-aware', 'crit-ptt', 'weight', and any of
-    them wrapped as 'molding:<name>'."""
+    """Factory: 'homogeneous', 'crit-aware', 'crit-ptt', 'weight',
+    'adaptive', and any of them wrapped as 'molding:<name>'."""
     if name.startswith("molding:"):
         return MoldingPolicy(make_policy(name.split(":", 1)[1]))
     return {
@@ -243,6 +315,7 @@ def make_policy(name: str) -> Policy:
         "crit-aware": CriticalityAwarePolicy,
         "crit-ptt": CriticalityPTTPolicy,
         "weight": WeightBasedPolicy,
+        "adaptive": AdaptivePolicy,
     }[name]()
 
 
@@ -251,6 +324,8 @@ ALL_POLICY_NAMES = (
     "crit-aware",
     "crit-ptt",
     "weight",
+    "adaptive",
     "molding:crit-ptt",
     "molding:weight",
+    "molding:adaptive",
 )

@@ -62,7 +62,10 @@ class SchedulerCore:
         self.policy = policy
         self.ptt = PTTRegistry(spec)
         self.rng = random.Random(seed)
-        self._crit = _CritMultiset()
+        # one criticality multiset per DAG namespace: concurrent tenants must
+        # not drown each other's critical paths (a small DAG's root is still
+        # critical even while a 3000-node DAG holds criticality 800).
+        self._crit: dict[int, _CritMultiset] = {}
         self._in_flight = 0           # ready+running TAOs (molding load signal)
         self._completed = 0
         self._lock = threading.RLock()
@@ -71,8 +74,9 @@ class SchedulerCore:
     def system_load(self) -> int:
         return self._in_flight
 
-    def running_max_criticality(self) -> int:
-        return self._crit.max()
+    def running_max_criticality(self, namespace: int = 0) -> int:
+        ms = self._crit.get(namespace)
+        return ms.max() if ms is not None else 0
 
     # -- lifecycle transitions -------------------------------------------------
     def admit(self, tao: TAO, waker: int) -> Placement:
@@ -86,7 +90,10 @@ class SchedulerCore:
             target = placement.target % self.spec.n_workers
             tao.assigned_width = width
             tao.assigned_leader = leader_of(target, width)
-            self._crit.add(tao.criticality)
+            ms = self._crit.get(tao.dag_id)
+            if ms is None:
+                ms = self._crit[tao.dag_id] = _CritMultiset()
+            ms.add(tao.criticality)
             self._in_flight += 1
             return Placement(target=target, width=width)
 
@@ -94,7 +101,14 @@ class SchedulerCore:
         """Paper §3.2: executed by the last core completing a TAO.  Returns
         the children that became ready (the vehicle then calls ``admit``)."""
         with self._lock:
-            self._crit.remove(tao.criticality)
+            ms = self._crit.get(tao.dag_id)
+            if ms is None:
+                raise KeyError(f"no criticality namespace {tao.dag_id}")
+            ms.remove(tao.criticality)
+            if not ms:
+                # a long-lived stream admits many DAGs; drop drained
+                # namespaces so memory stays bounded by concurrency
+                del self._crit[tao.dag_id]
             self._in_flight -= 1
             self._completed += 1
             ready = []
@@ -124,10 +138,13 @@ class SchedulerCore:
     def completed(self) -> int:
         return self._completed
 
-    def prepare(self, dag: TaoDag) -> list[TAO]:
+    def prepare(self, dag: TaoDag, dag_id: int = 0) -> list[TAO]:
         """Reset execution state, run the criticality pre-pass (paper: done as
-        the runtime is started) and return the initially-ready TAOs."""
+        the runtime is started), tag every node with its criticality
+        namespace, and return the initially-ready TAOs."""
         dag.validate()
         dag.assign_criticality()
         dag.reset_execution_state()
+        for n in dag.nodes:
+            n.dag_id = dag_id
         return dag.roots()

@@ -114,6 +114,51 @@ class TraceRecord:
     start: float
     end: float
     participants: tuple
+    dag_id: int = 0     # which admitted DAG (0 = legacy single-DAG runs)
+
+
+class _IndexedSet:
+    """Set of ints with O(1) add / discard / uniform random choice.
+
+    The simulator's dispatch hot path needs "pick a uniformly random idle
+    worker" and "pick a uniformly random steal victim" — a plain ``set``
+    forces an O(n_workers) scan (or an O(n log n) ``sorted``) per dispatch,
+    which dominates at fleet scale.  A swap-remove list plus an index map
+    keeps all three operations constant-time while staying deterministic:
+    the internal order is a pure function of the operation history, so a
+    fixed seed still reproduces the exact same schedule.
+    """
+
+    __slots__ = ("_items", "_pos")
+
+    def __init__(self, items=()):
+        self._items: list[int] = []
+        self._pos: dict[int, int] = {}
+        for v in items:
+            self.add(v)
+
+    def add(self, v: int) -> None:
+        if v not in self._pos:
+            self._pos[v] = len(self._items)
+            self._items.append(v)
+
+    def discard(self, v: int) -> None:
+        i = self._pos.pop(v, None)
+        if i is None:
+            return
+        last = self._items.pop()
+        if i < len(self._items):
+            self._items[i] = last
+            self._pos[last] = i
+
+    def choice(self, rng: random.Random) -> int:
+        return self._items[rng.randrange(len(self._items))]
+
+    def __contains__(self, v: int) -> bool:
+        return v in self._pos
+
+    def __len__(self) -> int:
+        return len(self._items)
 
 
 @dataclasses.dataclass
@@ -139,6 +184,7 @@ class Simulator:
         policy: Policy,
         kernel_models: dict | None = None,
         seed: int = 0,
+        fast_dispatch: bool = True,
     ):
         self.spec = spec
         self.core = SchedulerCore(spec, policy, seed=seed)
@@ -147,6 +193,9 @@ class Simulator:
         # dynamic per-worker speed multipliers (straggler injection)
         self.speed_mult = [1.0] * spec.n_workers
         self.failed: set = set()
+        # fast_dispatch=False keeps the original O(n_workers) victim scan and
+        # sorted(idle) choice — only useful as the baseline in perf tests.
+        self.fast_dispatch = fast_dispatch
 
     # -- fault/straggler injection (used by runtime_ft tests) ---------------
     def set_speed_multiplier(self, worker: int, mult: float) -> None:
@@ -157,21 +206,54 @@ class Simulator:
         self.speed_mult[worker] = 0.0
 
     # -- main entry -----------------------------------------------------------
-    def run(self, dag: TaoDag, max_events: int | None = None) -> SimResult:
-        roots = self.core.prepare(dag)
+    def run(self, dag, max_events: int | None = None) -> SimResult:
+        """Execute one DAG (offline, arrival at t=0) or a whole ``Workload``
+        stream (online arrivals).  Returns a ``WorkloadResult`` (a
+        ``SimResult`` subclass) either way; workload runs carry the per-DAG
+        latency table in ``result.per_dag``.
+
+        ``max_events`` bounds *all* processed events — TAO completions plus
+        one arrival event per admitted DAG — so budget ``n_taos + n_dags``
+        when sizing it exactly."""
+        from .workload import Workload
+        if isinstance(dag, Workload):
+            return self.run_workload(dag, max_events=max_events)
+        return self._execute([(0.0, 0, dag, "")], max_events)
+
+    def run_workload(self, workload, max_events: int | None = None):
+        """Execute a multi-DAG arrival stream on the shared pool."""
+        arrivals = [(a.at, a.dag_id, a.dag, a.name)
+                    for a in workload.arrivals()]
+        return self._execute(arrivals, max_events)
+
+    def _execute(self, arrivals: list, max_events: int | None):
+        from .workload import DagStats, WorkloadResult
         n_workers = self.spec.n_workers
+        fast = self.fast_dispatch
 
         free_time = [0.0] * n_workers
         queues = [deque() for _ in range(n_workers)]
-        idle = set(range(n_workers)) - self.failed
+        if fast:
+            idle = _IndexedSet(w for w in range(n_workers)
+                               if w not in self.failed)
+        else:
+            idle = set(range(n_workers)) - self.failed
+        # workers whose ready-queue is non-empty (maintained in fast mode so
+        # steal-victim selection is O(1) instead of an O(n_workers) scan)
+        nonempty = _IndexedSet()
         busy_acc = 0.0
 
-        events: list = []   # (time, seq, tao)
+        ARRIVE, COMPLETE = 0, 1
+        events: list = []   # (time, seq, kind, payload)
         seq = itertools.count()
         now = 0.0
         trace: list[TraceRecord] = []
+        stats: dict[int, DagStats] = {}
         # running streaming / same-type counters per cluster for interference
-        running: dict[int, TraceRecord] = {}
+        running: dict[TAO, TraceRecord] = {}
+
+        for at, dag_id, dag, name in arrivals:
+            heapq.heappush(events, (at, next(seq), ARRIVE, (dag_id, dag, name)))
 
         def cluster_of(worker: int) -> str:
             return self.spec.class_of(worker)
@@ -185,6 +267,17 @@ class Simulator:
                 ):
                     n += 1
             return n
+
+        def push_queue(worker: int, tao: TAO) -> None:
+            queues[worker].append(tao)
+            if fast:
+                nonempty.add(worker)
+
+        def pop_queue(worker: int) -> TAO:
+            tao = queues[worker].popleft()
+            if fast and not queues[worker]:
+                nonempty.discard(worker)
+            return tao
 
         def start_tao(tao: TAO, popper: int, t0: float) -> None:
             nonlocal busy_acc
@@ -254,50 +347,67 @@ class Simulator:
                 free_time[m] = t_end
                 idle.discard(m)
             rec = TraceRecord(tao.id, tao.type, leader, width,
-                              t0, t_end, tuple(chosen))
-            running[tao.id] = rec
+                              t0, t_end, tuple(chosen), dag_id=tao.dag_id)
+            running[tao] = rec
             trace.append(rec)
-            heapq.heappush(events, (t_end, next(seq), tao))
+            st = stats.get(tao.dag_id)
+            if st is not None and t0 < st.started:
+                st.started = t0
+            heapq.heappush(events, (t_end, next(seq), COMPLETE, tao))
 
         def dispatch_from(worker: int, t0: float) -> bool:
             """Worker tries local pop then one random steal (paper §5)."""
             if worker in self.failed:
                 return False
             if queues[worker]:
-                tao = queues[worker].popleft()
-                start_tao(tao, worker, t0)
+                start_tao(pop_queue(worker), worker, t0)
                 return True
+            if fast:
+                if nonempty:
+                    v = nonempty.choice(self.rng)
+                    start_tao(pop_queue(v), worker, t0)
+                    return True
+                return False
             victims = [v for v in range(n_workers) if queues[v]]
             if victims:
                 v = self.rng.choice(victims)
-                tao = queues[v].popleft()
-                start_tao(tao, worker, t0)
+                start_tao(pop_queue(v), worker, t0)
                 return True
             return False
 
         def enqueue_ready(tao: TAO, waker: int, t0: float) -> None:
             placement = self.core.admit(tao, waker)
-            queues[placement.target].append(tao)
+            push_queue(placement.target, tao)
             # an idle worker picks it up immediately: locality first
             if placement.target in idle and free_time[placement.target] <= t0 + 1e-12:
                 idle.discard(placement.target)
                 dispatch_from(placement.target, t0)
             elif idle:
-                w = self.rng.choice(sorted(idle))
+                w = idle.choice(self.rng) if fast \
+                    else self.rng.choice(sorted(idle))
                 if free_time[w] <= t0 + 1e-12:
                     idle.discard(w)
                     dispatch_from(w, t0)
-
-        for r in roots:
-            enqueue_ready(r, waker=0, t0=0.0)
 
         n_events = 0
         while events:
             n_events += 1
             if max_events is not None and n_events > max_events:
                 raise RuntimeError("simulator exceeded max_events (livelock?)")
-            now, _, tao = heapq.heappop(events)
-            rec = running.pop(tao.id)
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == ARRIVE:
+                dag_id, dag, name = payload
+                roots = self.core.prepare(dag, dag_id=dag_id)
+                st = DagStats(dag_id=dag_id, name=name,
+                              arrival=now, n_taos=len(dag))
+                stats[dag_id] = st
+                if st.n_taos == 0:   # degenerate: an empty DAG is done on arrival
+                    st.started = st.finished = now
+                for r in roots:
+                    enqueue_ready(r, waker=0, t0=now)
+                continue
+            tao = payload
+            rec = running.pop(tao)
             # leader-only PTT record: leader's elapsed view
             if rec.leader in rec.participants:
                 elapsed = rec.end - max(rec.start, 0.0)
@@ -305,6 +415,11 @@ class Simulator:
             # commit-and-wakeup
             for child in self.core.commit_and_wakeup(tao):
                 enqueue_ready(child, waker=rec.leader, t0=now)
+            st = stats.get(tao.dag_id)
+            if st is not None:
+                st.completed += 1
+                if st.completed == st.n_taos:
+                    st.finished = now
             # freed members look for work
             for m in rec.participants:
                 if free_time[m] <= now + 1e-12 and m not in self.failed:
@@ -315,12 +430,13 @@ class Simulator:
         completed = self.core.completed
         util = busy_acc / (makespan * max(1, n_workers - len(self.failed))) \
             if makespan > 0 else 0.0
-        return SimResult(
+        return WorkloadResult(
             makespan=makespan,
             throughput=completed / makespan if makespan > 0 else 0.0,
             completed=completed,
             utilization=util,
             trace=trace,
+            per_dag=stats,
         )
 
 

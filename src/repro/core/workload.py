@@ -1,0 +1,179 @@
+"""Concurrent multi-DAG workloads: online arrival streams over one pool.
+
+The paper evaluates one DAG at a time, but a production pool serves a
+*stream* of mixed-mode DAGs arriving online (requests, training jobs,
+pipelines) that share a single heterogeneous worker fleet.  Following the
+adaptive-scheduling follow-up (arXiv:1905.00673) and the workload-centric
+view of arXiv:2502.06304, the scheduling unit here is the whole stream:
+
+* ``Workload``      — an ordered set of ``DagArrival`` events (trace-driven
+  via :meth:`Workload.from_trace`; synthetic Poisson streams of random DAGs
+  come from :func:`repro.core.dag_gen.random_workload`).
+* ``DagStats``      — per-DAG latency accounting: arrival, first execution,
+  completion; derived sojourn (completion - arrival, the end-to-end latency
+  a tenant observes) and makespan (completion - first execution).
+* ``WorkloadResult``— a :class:`~repro.core.simulator.SimResult` extended
+  with the per-DAG table and sojourn percentiles (p50/p99).
+
+Criticality namespaces: each admitted DAG keeps its own criticality scale
+(a 5-node DAG's root must still count as critical next to a 3000-node
+tenant), which ``SchedulerCore`` implements as per-``dag_id`` multisets.
+
+This module holds only data/aggregation; the event loop that executes a
+``Workload`` lives in :meth:`repro.core.simulator.Simulator.run_workload`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Sequence
+
+from .dag import TaoDag
+from .simulator import SimResult
+
+
+@dataclasses.dataclass(frozen=True)
+class DagArrival:
+    """One DAG joining the system at an absolute time."""
+
+    dag: TaoDag
+    at: float
+    dag_id: int
+    name: str = ""
+
+    def __repr__(self) -> str:
+        return (f"DagArrival(dag_id={self.dag_id}, at={self.at:.4f}, "
+                f"n_taos={len(self.dag)}, name={self.name!r})")
+
+
+class Workload:
+    """An online stream of TAO-DAGs sharing one scheduler/pool.
+
+    ``dag_id`` values are assigned on :meth:`add` starting from 1 —
+    namespace 0 is reserved for the legacy single-DAG ``Simulator.run``
+    path so mixed usage never collides.
+    """
+
+    def __init__(self) -> None:
+        self._arrivals: list[DagArrival] = []
+        # id() of admitted dag *objects* (duplicate-object guard) — not the
+        # assigned DagArrival.dag_id namespace values
+        self._seen_obj_ids: set[int] = set()
+        self._ids = itertools.count(1)
+
+    # -- construction -------------------------------------------------------
+    def add(self, dag: TaoDag, at: float = 0.0, name: str = "") -> DagArrival:
+        if at < 0:
+            raise ValueError(f"arrival time must be >= 0, got {at}")
+        if id(dag) in self._seen_obj_ids:
+            # execution state (pending counters, dag_id tags) lives on the
+            # TAO nodes, so one TaoDag object cannot be in flight twice;
+            # re-submitting a recurring job needs a fresh/copied DAG
+            raise ValueError(
+                "this TaoDag is already in the workload; build a copy to "
+                "submit it again")
+        did = next(self._ids)
+        arr = DagArrival(dag=dag, at=float(at), dag_id=did,
+                         name=name or f"dag{did}")
+        self._arrivals.append(arr)
+        self._seen_obj_ids.add(id(dag))
+        return arr
+
+    @classmethod
+    def from_trace(cls, entries: Iterable[tuple]) -> "Workload":
+        """Trace-driven arrivals: iterable of ``(at, dag)`` or
+        ``(at, dag, name)`` tuples (any order; sorted on iteration)."""
+        wl = cls()
+        for e in entries:
+            at, dag, *rest = e
+            wl.add(dag, at=at, name=rest[0] if rest else "")
+        return wl
+
+    # -- queries ------------------------------------------------------------
+    def arrivals(self) -> list[DagArrival]:
+        """Arrival events sorted by (time, dag_id) — the stream order."""
+        return sorted(self._arrivals, key=lambda a: (a.at, a.dag_id))
+
+    def total_taos(self) -> int:
+        return sum(len(a.dag) for a in self._arrivals)
+
+    def __len__(self) -> int:
+        return len(self._arrivals)
+
+    def __iter__(self):
+        return iter(self.arrivals())
+
+
+@dataclasses.dataclass
+class DagStats:
+    """Per-DAG latency accounting inside a workload run."""
+
+    dag_id: int
+    name: str
+    arrival: float
+    n_taos: int
+    started: float = float("inf")    # first TAO execution start
+    finished: float = float("nan")   # last TAO completion
+    completed: int = 0               # TAOs committed so far
+
+    @property
+    def done(self) -> bool:
+        return self.completed == self.n_taos
+
+    @property
+    def sojourn(self) -> float:
+        """End-to-end latency the tenant observes: completion - arrival."""
+        return self.finished - self.arrival
+
+    @property
+    def makespan(self) -> float:
+        """Pure execution span: completion - first TAO start (excludes
+        queueing of the roots behind other tenants)."""
+        return self.finished - self.started
+
+    @property
+    def queue_delay(self) -> float:
+        """Time the DAG's first TAO waited behind other tenants."""
+        return self.started - self.arrival
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); nan on empty input.
+
+    Deterministic and interpolation-free so latency reports are stable
+    across numpy versions and list orderings.
+    """
+    if not values:
+        return float("nan")
+    if not 0 <= q <= 100:
+        raise ValueError(f"percentile must be in [0, 100], got {q}")
+    s = sorted(values)
+    rank = max(1, -(-len(s) * q // 100))  # ceil without floats
+    return float(s[int(rank) - 1])
+
+
+@dataclasses.dataclass
+class WorkloadResult(SimResult):
+    """SimResult + per-DAG latency table for a multi-tenant run."""
+
+    per_dag: dict = dataclasses.field(default_factory=dict)  # dag_id -> DagStats
+
+    def sojourns(self) -> list[float]:
+        return [s.sojourn for s in self.per_dag.values() if s.done]
+
+    def sojourn_p50(self) -> float:
+        return percentile(self.sojourns(), 50)
+
+    def sojourn_p99(self) -> float:
+        return percentile(self.sojourns(), 99)
+
+    def mean_sojourn(self) -> float:
+        so = self.sojourns()
+        return sum(so) / len(so) if so else float("nan")
+
+    def __repr__(self) -> str:
+        return (f"WorkloadResult(dags={len(self.per_dag)}, "
+                f"makespan={self.makespan:.4f}s, "
+                f"p50={self.sojourn_p50():.4f}s, "
+                f"p99={self.sojourn_p99():.4f}s, "
+                f"completed={self.completed}, util={self.utilization:.2%})")

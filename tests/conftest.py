@@ -10,6 +10,12 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "perf: performance smoke tests (compare optimized vs baseline paths)")
+
+
 @pytest.fixture(scope="session")
 def rng_seed() -> int:
     return 0

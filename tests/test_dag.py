@@ -3,6 +3,7 @@ independent longest-path computation), topological order, degree."""
 import random
 
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt): skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import TAO, TaoDag, chain, paper_dags, random_dag

@@ -1,5 +1,7 @@
 """Per-architecture smoke tests (reduced configs, 1 real step on CPU, shape
 + finiteness assertions) and cross-path consistency checks."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -109,9 +111,18 @@ def test_decode_rolling_window_matches_full_history():
     full = model.forward(params, {"tokens": toks})
     pre, cache = model.prefill(params, {"tokens": toks[:, :-1]})
     dec, _ = model.decode_step(params, toks[:, -1:], cache)
-    np.testing.assert_allclose(np.asarray(dec[:, 0], np.float32),
-                               np.asarray(full[:, -1], np.float32),
-                               rtol=3e-2, atol=3e-2)
+    dec32 = np.asarray(dec[:, 0], np.float32)
+    full32 = np.asarray(full[:, -1], np.float32)
+    # The two paths accumulate attention/MLP sums in different orders, and
+    # activations are bf16 (eps = 2^-8), so per-element error grows like
+    # eps * sqrt(n_reductions) — roughly 4 major reductions per layer (attn
+    # scores/values, two MLP matmuls) plus embed/unembed.  The 4x headroom
+    # covers constant factors without masking real cache bugs; the old flat
+    # rtol/atol=0.03 flaked whenever a single reduction reassociated.
+    eps_bf16 = 2.0 ** -8
+    depth = 4 * cfg.n_layers + 2
+    atol = 4 * eps_bf16 * math.sqrt(depth)
+    np.testing.assert_allclose(dec32, full32, rtol=3e-2, atol=atol)
 
 
 def test_moe_capacity_drops_are_bounded():

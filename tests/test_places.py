@@ -1,5 +1,6 @@
 """Unit + property tests for elastic places and the leader formula."""
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt): skip, not error
 from hypothesis import given, strategies as st
 
 from repro.core import (BIG, LITTLE, ClusterSpec, hikey960, homogeneous,

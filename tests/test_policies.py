@@ -21,7 +21,7 @@ class _Ctx(SchedulerCore):
     def system_load(self):
         return self._load
 
-    def running_max_criticality(self):
+    def running_max_criticality(self, namespace=0):
         return self._max_crit
 
 

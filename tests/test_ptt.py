@@ -3,6 +3,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt): skip, not error
 from hypothesis import given, strategies as st
 
 from repro.core import PTT, PTTRegistry, hikey960

@@ -4,6 +4,7 @@ legal, makespan bounded below by the critical path, PTT written only at
 leader rows."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt): skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ALL_POLICY_NAMES, ClusterSpec, Simulator, hikey960,

@@ -1,0 +1,150 @@
+"""Boundary tests for width selection: ``SchedulerCore._clamp_width`` and
+``MoldingPolicy`` at width 1, max_width, and non-power-of-two hints."""
+import pytest
+
+from repro.core import (TAO, ClusterSpec, HomogeneousPolicy, MoldingPolicy,
+                        Placement, hikey960, homogeneous, make_policy)
+from repro.core.scheduler import SchedulerCore
+
+
+class _Ctx(SchedulerCore):
+    """SchedulerCore with a settable load for molding unit tests."""
+
+    def __init__(self, spec, load=0, seed=0):
+        super().__init__(spec, HomogeneousPolicy(), seed=seed)
+        self._load = load
+
+    def system_load(self):
+        return self._load
+
+
+# ------------------------------------------------------------ clamp_width --
+def test_clamp_width_keeps_valid_widths():
+    core = SchedulerCore(hikey960(), HomogeneousPolicy())
+    for w in (1, 2, 4, 8):
+        assert core._clamp_width(w) == w
+
+
+@pytest.mark.parametrize("requested,expected", [
+    (3, 2), (5, 4), (6, 4), (7, 4),   # non-power-of-two: round down
+    (9, 8), (100, 8),                 # above max_width: clamp to max
+    (0, 1), (-3, 1),                  # degenerate hints: floor at width 1
+])
+def test_clamp_width_boundaries_hikey(requested, expected):
+    core = SchedulerCore(hikey960(), HomogeneousPolicy())
+    assert core._clamp_width(requested) == expected
+
+
+def test_clamp_width_non_power_of_two_pool():
+    # 6 workers -> valid widths (1, 2, 4): max_width is not n_workers
+    core = SchedulerCore(homogeneous(6), HomogeneousPolicy())
+    assert core.spec.widths == (1, 2, 4)
+    assert core._clamp_width(6) == 4
+    assert core._clamp_width(5) == 4
+    assert core._clamp_width(3) == 2
+
+
+def test_admit_applies_clamp_to_policy_width():
+    core = SchedulerCore(hikey960(), HomogeneousPolicy(), seed=0)
+    tao = TAO(type="matmul", width_hint=3)
+    p = core.admit(tao, waker=5)
+    assert p.width == 2                       # 3 rounds down to 2
+    assert tao.assigned_width == 2
+    assert tao.assigned_leader == (p.target // 2) * 2
+
+
+def test_single_worker_pool_always_width_1():
+    core = SchedulerCore(homogeneous(1), HomogeneousPolicy())
+    for w in (1, 2, 7):
+        assert core._clamp_width(w) == 1
+
+
+# -------------------------------------------------- molding: load-based --
+def test_molding_idle_system_widens_to_max_width():
+    # load 1 on 8 workers: fair share is the whole pool
+    ctx = _Ctx(hikey960(), load=1)
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="matmul", width_hint=1), ctx, waker=0)
+    assert p.width == ctx.spec.max_width == 8
+
+
+def test_molding_load_based_never_narrows_a_wide_hint():
+    # share = 8 // 4 = 2, but the programmer asked for max_width
+    ctx = _Ctx(hikey960(), load=4)
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="matmul", width_hint=8), ctx, waker=0)
+    assert p.width == 8
+
+
+def test_molding_busy_system_explores_current_width_first():
+    # load >= n_workers disables load-based molding; with a cold PTT the
+    # current (valid, leader-aligned) width is explored before hopping
+    ctx = _Ctx(hikey960(), load=8)
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="matmul", width_hint=1), ctx, waker=0)
+    assert p.width == 1
+
+
+def test_molding_non_power_of_two_hint_cold_table():
+    # hint 3 is not a valid width, so it cannot be "explored as current";
+    # the zero-init best_width query then proposes the first untried width
+    ctx = _Ctx(hikey960(), load=8)
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="sort", width_hint=3), ctx, waker=0)
+    assert p.width == 1
+
+
+# ------------------------------------------------ molding: history-based --
+def _fill_row(ctx, tao_type, leader, times):
+    table = ctx.ptt.table(tao_type)
+    for w, t in times.items():
+        table.record(leader, w, t)
+
+
+def test_molding_history_adopts_width_that_pays_for_itself():
+    ctx = _Ctx(hikey960(), load=8)
+    # cost = time * width: width 2 (0.8) beats width 1 (1.0)
+    _fill_row(ctx, "matmul", 0, {1: 1.0, 2: 0.4, 4: 0.5, 8: 0.2})
+    # costs: 1*1.0=1.0, 2*0.4=0.8, 4*0.5=2.0, 8*0.2=1.6 -> best is 2
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="matmul", width_hint=1), ctx, waker=0)
+    assert p.width == 2
+
+
+def test_molding_history_rejects_width_that_does_not_pay():
+    ctx = _Ctx(hikey960(), load=8)
+    # widening halves time only sublinearly: every cost > width-1 cost
+    _fill_row(ctx, "sort", 0, {1: 1.0, 2: 0.6, 4: 0.5, 8: 0.45})
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="sort", width_hint=1), ctx, waker=0)
+    assert p.width == 1
+
+
+def test_molding_history_can_reach_max_width():
+    ctx = _Ctx(hikey960(), load=8)
+    _fill_row(ctx, "matmul", 0, {1: 1.0, 2: 0.9, 4: 0.7, 8: 0.1})
+    # costs: 1.0, 1.8, 2.8, 0.8 -> max_width wins
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="matmul", width_hint=1), ctx, waker=0)
+    assert p.width == ctx.spec.max_width == 8
+
+
+def test_molding_history_only_consults_leader_aligned_widths():
+    # waker 5 leads only width-1 places (leader_of(5, w>1) != 5), so the
+    # molded width must stay at the single valid configuration: width 1
+    ctx = _Ctx(hikey960(), load=8)
+    _fill_row(ctx, "matmul", 5, {1: 1.0})    # warm: no zero-init short-cut
+    _fill_row(ctx, "matmul", 4, {4: 0.01})   # tempting row, wrong leader
+    pol = MoldingPolicy(HomogeneousPolicy())
+    p = pol.place(TAO(type="matmul", width_hint=1), ctx, waker=5)
+    assert p == Placement(target=5, width=1)
+
+
+def test_molding_composes_with_clamp_on_admission():
+    # end to end: molding on an idle 6-worker pool widens to 4 (the max
+    # valid width), never to the invalid "share" of 6
+    spec = homogeneous(6)
+    core = SchedulerCore(spec, make_policy("molding:homogeneous"), seed=0)
+    tao = TAO(type="copy", width_hint=1)
+    p = core.admit(tao, waker=0)
+    assert p.width == 4

@@ -1,0 +1,216 @@
+"""Workload-engine tests: concurrent multi-DAG streams on one shared pool.
+
+Covers the three multi-tenant invariants (determinism, per-DAG criticality
+isolation, conservation), arrival semantics, the latency accounting, and a
+perf smoke test showing the optimized O(1) dispatch structures beat the
+seed's O(n_workers) victim scan at fleet scale.
+"""
+import math
+import time
+
+import pytest
+
+from repro.core import (Simulator, TaoDag, Workload, chain, fleet, hikey960,
+                        make_policy, percentile, random_dag, random_workload)
+from repro.core.policies import _is_critical
+from repro.core.scheduler import SchedulerCore
+
+
+def _run(policy="crit-aware", wl_seed=0, sim_seed=0, spec=None, **wl_kw):
+    wl_kw.setdefault("n_dags", 5)
+    wl_kw.setdefault("n_tasks", 60)
+    wl_kw.setdefault("rate", 4.0)
+    wl = random_workload(seed=wl_seed, **wl_kw)
+    sim = Simulator(spec or hikey960(), make_policy(policy), seed=sim_seed)
+    return wl, sim.run_workload(wl)
+
+
+# ---------------------------------------------------------------- stream --
+def test_poisson_workload_is_deterministic_and_ordered():
+    mk = lambda: random_workload(n_dags=6, rate=2.0, n_tasks=30, seed=42)
+    a, b = mk(), mk()
+    ats = [arr.at for arr in a]
+    assert ats == sorted(ats) and ats[0] == 0.0
+    assert [arr.at for arr in b] == ats
+    assert [len(arr.dag) for arr in b] == [len(arr.dag) for arr in a]
+    # dag_ids are unique and namespace 0 stays reserved for single-DAG runs
+    ids = [arr.dag_id for arr in a]
+    assert len(set(ids)) == len(ids) and 0 not in ids
+
+
+def test_rejects_duplicate_dag_object():
+    # execution state lives on the TAO nodes, so one TaoDag object cannot
+    # be admitted twice — a recurring job must submit a fresh copy
+    dag = random_dag(10, target_degree=2.0, seed=0)
+    wl = Workload()
+    wl.add(dag, at=0.0)
+    with pytest.raises(ValueError, match="already in the workload"):
+        wl.add(dag, at=1.0)
+
+
+def test_from_trace_sorts_arrivals():
+    d1 = random_dag(10, target_degree=2.0, seed=0)
+    d2 = random_dag(10, target_degree=2.0, seed=1)
+    wl = Workload.from_trace([(0.5, d1, "late"), (0.0, d2, "early")])
+    assert [a.name for a in wl] == ["early", "late"]
+    assert wl.total_taos() == 20
+
+
+# ----------------------------------------------------------- determinism --
+@pytest.mark.parametrize("policy", ["crit-aware", "adaptive",
+                                    "molding:weight"])
+def test_same_seed_identical_trace_and_latencies(policy):
+    _, r1 = _run(policy=policy, wl_seed=3, sim_seed=7)
+    _, r2 = _run(policy=policy, wl_seed=3, sim_seed=7)
+    key = lambda rec: (rec.dag_id, rec.tao_id, rec.leader, rec.width,
+                       rec.start, rec.end, rec.participants)
+    assert [key(t) for t in r1.trace] == [key(t) for t in r2.trace]
+    assert {i: s.sojourn for i, s in r1.per_dag.items()} == \
+           {i: s.sojourn for i, s in r2.per_dag.items()}
+    assert r1.makespan == r2.makespan
+
+
+def test_different_sim_seed_changes_schedule_not_conservation():
+    _, r1 = _run(wl_seed=3, sim_seed=1)
+    _, r2 = _run(wl_seed=3, sim_seed=2)
+    assert r1.completed == r2.completed
+    # stealing is randomized, so traces should genuinely differ
+    k = lambda r: [(t.dag_id, t.tao_id, t.leader) for t in r.trace]
+    assert k(r1) != k(r2)
+
+
+# ---------------------------------------------------------- conservation --
+def test_every_admitted_tao_completes_exactly_once():
+    wl, res = _run(policy="molding:crit-ptt", n_dags=6, n_tasks=50)
+    seen: dict = {}
+    for rec in res.trace:
+        seen[(rec.dag_id, rec.tao_id)] = seen.get(
+            (rec.dag_id, rec.tao_id), 0) + 1
+    assert all(c == 1 for c in seen.values())
+    assert len(seen) == wl.total_taos() == res.completed
+    for arr in wl:
+        st = res.per_dag[arr.dag_id]
+        assert st.done and st.completed == len(arr.dag)
+
+
+def test_no_tao_starts_before_its_dag_arrives():
+    wl, res = _run(n_dags=8, rate=6.0)
+    arrival = {a.dag_id: a.at for a in wl}
+    for rec in res.trace:
+        assert rec.start >= arrival[rec.dag_id] - 1e-12
+    for i, st in res.per_dag.items():
+        assert st.arrival == arrival[i]
+        assert st.started >= st.arrival - 1e-12
+        assert st.finished >= st.started
+        assert st.sojourn >= st.makespan - 1e-12
+        assert st.queue_delay >= -1e-12
+
+
+# ------------------------------------------------- criticality isolation --
+def test_criticality_namespaces_are_isolated():
+    """A tiny DAG's root must stay critical in its own namespace even while
+    a long-chain tenant holds far larger criticality values."""
+    core = SchedulerCore(hikey960(), make_policy("crit-aware"), seed=0)
+
+    big_dag = TaoDag()
+    chain(big_dag, "matmul", 50)             # criticalities 50..1
+    small_dag = TaoDag()
+    chain(small_dag, "sort", 2)              # criticalities 2, 1
+
+    big_roots = core.prepare(big_dag, dag_id=1)
+    small_roots = core.prepare(small_dag, dag_id=2)
+    core.admit(big_roots[0], waker=0)        # crit 50 now in flight in ns 1
+
+    assert core.running_max_criticality(1) == 50
+    assert core.running_max_criticality(2) == 0
+    # the small root (crit 2) is critical within its own DAG ...
+    assert _is_critical(small_roots[0], core)
+    # ... but a mid-chain TAO of the big DAG (crit < 50) is not within its
+    big_mid = big_dag.nodes[10]
+    assert not _is_critical(big_mid, core)
+
+    # commit the big root: namespace 1 drains independently of namespace 2
+    core.admit(small_roots[0], waker=0)
+    core.commit_and_wakeup(big_roots[0])
+    assert core.running_max_criticality(1) == 0
+    assert core.running_max_criticality(2) == 2
+
+
+def test_crit_aware_routes_small_tenant_to_big_cores_under_load():
+    """Behavioural version: with namespaces, every DAG's own critical path
+    reaches the big cluster even while a bigger tenant is resident."""
+    spec = hikey960()
+    core = SchedulerCore(spec, make_policy("crit-aware"), seed=0)
+    big_dag = TaoDag()
+    chain(big_dag, "matmul", 100)
+    core.admit(core.prepare(big_dag, dag_id=1)[0], waker=0)
+
+    small_dag = TaoDag()
+    chain(small_dag, "sort", 3)
+    root = core.prepare(small_dag, dag_id=2)[0]
+    for _ in range(20):
+        p = core.policy.place(root, core, waker=0)
+        assert p.target in spec.big_workers
+
+
+# ------------------------------------------------------------ accounting --
+def test_percentile_nearest_rank():
+    assert percentile([4.0, 1.0, 3.0, 2.0], 50) == 2.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 99) == 4.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 0) == 1.0
+    assert math.isnan(percentile([], 50))
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+
+
+def test_workload_result_reports_sojourn_percentiles():
+    _, res = _run(n_dags=7)
+    so = sorted(res.sojourns())
+    assert len(so) == 7
+    assert res.sojourn_p50() == so[(7 * 50 + 99) // 100 - 1] == so[3]
+    assert res.sojourn_p99() == so[-1]
+    assert so[0] <= res.mean_sojourn() <= so[-1]
+    assert "p99" in repr(res)
+
+
+def test_single_dag_run_still_offline_compatible():
+    """Simulator.run(dag) keeps the legacy contract: one DAG, arrival at 0,
+    per-DAG table with the reserved namespace 0."""
+    dag = random_dag(120, target_degree=3.0, seed=5)
+    res = Simulator(hikey960(), make_policy("molding:weight"), seed=0).run(dag)
+    assert res.completed == 120
+    assert set(res.per_dag) == {0}
+    st = res.per_dag[0]
+    assert st.arrival == 0.0 and st.done
+    assert st.sojourn == pytest.approx(res.makespan)
+
+
+# ------------------------------------------------------------------ perf --
+@pytest.mark.perf
+def test_fast_dispatch_beats_seed_victim_scan_at_fleet_scale():
+    """The incrementally-maintained non-empty/idle sets must beat the seed's
+    O(n_workers) victim scan + sorted(idle) on a 1000-TAO DAG over a
+    1000-worker fleet — the sweep the ROADMAP calls for."""
+    spec = fleet(750, 250)
+
+    def timed(fast_dispatch):
+        # best-of-3 so a CI scheduling hiccup in one run cannot flake the
+        # comparison (observed ratio is ~3.5x, asserted at 1.4x)
+        best, res = float("inf"), None
+        for _ in range(3):
+            dag = random_dag(1000, target_degree=8.06, seed=7, width_hint=1)
+            sim = Simulator(spec, make_policy("homogeneous"), seed=3,
+                            fast_dispatch=fast_dispatch)
+            t0 = time.perf_counter()
+            res = sim.run(dag)
+            best = min(best, time.perf_counter() - t0)
+        return best, res
+
+    t_slow, r_slow = timed(False)
+    t_fast, r_fast = timed(True)
+    assert r_slow.completed == r_fast.completed == 1000
+    # both paths schedule legally; only the victim/idle selection differs
+    assert abs(r_fast.makespan - r_slow.makespan) / r_slow.makespan < 0.5
+    assert t_fast < t_slow * 0.7, (
+        f"fast dispatch {t_fast:.3f}s not measurably faster than "
+        f"seed victim-scan {t_slow:.3f}s")
