@@ -133,26 +133,42 @@ def tables_molding(n_tasks: int = 3000) -> None:
 # beyond-paper: concurrent multi-DAG workload stream (online arrivals)
 # ---------------------------------------------------------------------------
 def multi_dag_bench(n_dags: int = 16, n_tasks: int = 150,
-                    rate: float = 4.0) -> None:
-    """Rank every policy on a 64-worker online-arrival stream.
+                    rate: float = 4.0, vehicle: str = "sim") -> None:
+    """Rank every policy on an online-arrival stream.
 
-    ``n_dags`` mixed-degree random DAGs arrive as a Poisson process over a
-    fleet(48, 16) pool; the metric is per-DAG sojourn (completion - arrival),
-    reported as mean (us_per_call column) plus p50/p99 in the derived column.
+    ``n_dags`` mixed-degree random DAGs arrive as a Poisson process; the
+    metric is per-DAG sojourn (completion - arrival), reported as mean
+    (us_per_call column) plus p50/p99 in the derived column.
+
+    ``vehicle='sim'`` replays the stream on the discrete-event simulator
+    over a fleet(48, 16) pool; ``vehicle='threaded'`` runs the *same
+    Workload abstraction* on real worker threads (hikey960-shaped 8-thread
+    pool, scaled-down stream so arrivals are real wall-clock sleeps) —
+    making the two execution vehicles directly comparable on one stream.
     """
-    from repro.core import (ALL_POLICY_NAMES, Simulator, fleet, make_policy,
-                            random_workload)
+    from repro.core import (ALL_POLICY_NAMES, Simulator, ThreadedRuntime,
+                            fleet, hikey960, make_policy, random_workload)
 
-    spec = fleet(48, 16)          # 64 workers: 48 big + 16 LITTLE groups
+    if vehicle == "threaded":
+        # real wall-clock execution: compress the stream so the whole
+        # policy sweep stays a few seconds
+        spec, tag = hikey960(), "threaded8"
+        n_dags, n_tasks, rate = min(n_dags, 6), min(n_tasks, 40), 40.0
+    else:
+        spec, tag = fleet(48, 16), "fleet64"   # 48 big + 16 LITTLE groups
     ranking = []
     for policy in ALL_POLICY_NAMES:
         wl = random_workload(n_dags=n_dags, rate=rate, n_tasks=n_tasks,
                              seed=0)
-        sim = Simulator(spec, make_policy(policy), seed=1)
-        res = sim.run_workload(wl)
+        if vehicle == "threaded":
+            rt = ThreadedRuntime(spec, make_policy(policy), seed=1)
+            res = rt.run_workload(wl, timeout_s=120.0)
+        else:
+            sim = Simulator(spec, make_policy(policy), seed=1)
+            res = sim.run_workload(wl)
         assert res.completed == wl.total_taos()
         p50, p99 = res.sojourn_p50(), res.sojourn_p99()
-        emit(f"multidag.fleet64.{policy}",
+        emit(f"multidag.{tag}.{policy}",
              res.mean_sojourn() * 1e6,
              f"p50={p50:.4f}s;p99={p99:.4f}s;"
              f"makespan={res.makespan:.4f}s;util={res.utilization:.3f}")
@@ -232,12 +248,17 @@ SECTIONS = ("all", "fig4", "fig6", "tab", "multi-dag", "multidag", "serve",
             "train", "roofline")
 
 
+VEHICLES = ("sim", "threaded")
+
+
 def main() -> None:
     # Selectors: positional section names and/or `--workload <name>`
     # (`run.py --workload multi-dag` is the documented stream-bench entry);
     # all selected sections run, unknown names abort with the valid list.
+    # `--vehicle {sim,threaded}` picks the multi-dag execution vehicle.
     args = sys.argv[1:]
     selected: list[str] = []
+    vehicle = "sim"
     i = 0
     while i < len(args):
         if args[i] == "--workload":
@@ -247,9 +268,19 @@ def main() -> None:
             selected.append(args[i])
         elif args[i].startswith("--workload="):
             selected.append(args[i].split("=", 1)[1])
+        elif args[i] == "--vehicle":
+            i += 1
+            if i >= len(args):
+                sys.exit("--vehicle needs a value (sim or threaded)")
+            vehicle = args[i]
+        elif args[i].startswith("--vehicle="):
+            vehicle = args[i].split("=", 1)[1]
         else:
             selected.append(args[i])
         i += 1
+    if vehicle not in VEHICLES:
+        sys.exit(f"unknown vehicle: {vehicle} "
+                 f"(choose from: {', '.join(VEHICLES)})")
     unknown = [s for s in selected if s not in SECTIONS]
     if unknown:
         sys.exit(f"unknown section(s): {', '.join(unknown)} "
@@ -269,7 +300,7 @@ def main() -> None:
     if sel("tab"):
         tables_molding()
     if sel("multi-dag", "multidag"):
-        multi_dag_bench()
+        multi_dag_bench(vehicle=vehicle)
     if sel("serve"):
         serve_bench()
     if sel("train"):

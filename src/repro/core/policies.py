@@ -45,8 +45,13 @@ class SchedulerContext(Protocol):
     ptt: PTTRegistry
     rng: random.Random
 
-    def system_load(self) -> int:
-        """Number of ready + running TAOs (the molding load signal)."""
+    def system_load(self, namespace: int | None = None) -> int:
+        """Number of ready + running TAOs (the molding load signal) —
+        globally by default, or restricted to one DAG namespace."""
+        ...
+
+    def active_namespaces(self) -> int:
+        """Number of DAG namespaces with at least one ready/running TAO."""
         ...
 
     def running_max_criticality(self, namespace: int = 0) -> int:
@@ -240,9 +245,17 @@ class MoldingPolicy(Policy):
     """Width molding wrapper: *load-based* primarily, *history-based* when the
     system is loaded; placement is delegated to ``inner``.
 
-    * load-based: when the system load is lower than the available resources,
-      widen to the fair share ``n_workers // load`` (rounded down to a valid
-      power-of-two width) so idle resources get exploited.
+    * load-based: when the load is lower than the available resources, widen
+      to the fair share (rounded down to a valid power-of-two width) so idle
+      resources get exploited.  With ``workload_aware=True`` (the default)
+      the sizing is *per tenant*: each active DAG namespace gets an equal
+      quota of the pool (``n_workers // active_namespaces``) and the TAO's
+      width is its namespace's share of that quota — so a 5-node tenant
+      arriving during a 3000-node tenant's burst still gets widened, instead
+      of seeing the global in-flight counter already past ``n_workers``.
+      With a single active namespace this reduces exactly to the legacy
+      global-counter formula (``workload_aware=False`` keeps that formula
+      unconditionally).
     * history-based: within the (tentative) leader's PTT row, adopt width w
       only if ``time[w] * w < time[cur]`` — i.e. extra resources must pay for
       themselves (paper: "the recorded execution time for that width x the
@@ -252,20 +265,30 @@ class MoldingPolicy(Policy):
 
     name = "molding"
 
-    def __init__(self, inner: Policy):
+    def __init__(self, inner: Policy, workload_aware: bool = True):
         self.inner = inner
+        self.workload_aware = workload_aware
         self.name = f"molding({inner.name})"
 
     def reset(self) -> None:
         self.inner.reset()
 
     # -- width selection ----------------------------------------------------
-    def _load_based_width(self, ctx: SchedulerContext, cur: int) -> int | None:
-        load = ctx.system_load()
+    def _load_based_width(self, tao: TAO, ctx: SchedulerContext,
+                          cur: int) -> int | None:
         n = ctx.spec.n_workers
-        if load >= n:
-            return None  # system busy: no justification for idle-resource sizing
-        share = n // max(load, 1)
+        if self.workload_aware:
+            # fair share across active tenants, then across the TAO's own
+            # namespace load (the TAO itself is not yet admitted, so a
+            # just-arrived tenant sees load 0 -> the full quota)
+            quota = n // max(ctx.active_namespaces(), 1)
+            load = ctx.system_load(tao.dag_id)
+        else:
+            quota = n
+            load = ctx.system_load()
+        if load >= quota:
+            return None  # tenant quota busy: no idle-resource justification
+        share = quota // max(load, 1)
         w = 1
         while w * 2 <= share and w * 2 <= ctx.spec.max_width:
             w *= 2
@@ -295,7 +318,7 @@ class MoldingPolicy(Policy):
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
         base = self.inner.place(tao, ctx, waker)
         cur = base.width
-        molded = self._load_based_width(ctx, cur)
+        molded = self._load_based_width(tao, ctx, cur)
         if molded is None:
             leader = leader_of(base.target, cur)
             molded = self._history_based_width(tao, ctx, leader, cur)
@@ -307,9 +330,14 @@ class MoldingPolicy(Policy):
 # ---------------------------------------------------------------------------
 def make_policy(name: str) -> Policy:
     """Factory: 'homogeneous', 'crit-aware', 'crit-ptt', 'weight',
-    'adaptive', and any of them wrapped as 'molding:<name>'."""
+    'adaptive', and any of them wrapped as 'molding:<name>' (per-namespace
+    workload-aware sizing) or 'molding-global:<name>' (legacy global
+    in-flight counter)."""
     if name.startswith("molding:"):
         return MoldingPolicy(make_policy(name.split(":", 1)[1]))
+    if name.startswith("molding-global:"):
+        return MoldingPolicy(make_policy(name.split(":", 1)[1]),
+                             workload_aware=False)
     return {
         "homogeneous": HomogeneousPolicy,
         "crit-aware": CriticalityAwarePolicy,

@@ -14,6 +14,13 @@ executing, so threads genuinely overlap).  This is exactly the paper's model
 of a TAO as "a black box filled with work" with an embedded scheduler —
 the chunk counter *is* the embedded scheduler.
 
+``run`` executes one DAG offline; ``run_workload`` executes a multi-DAG
+``Workload`` stream *online*: an admission thread sleeps until each
+arrival's wall-clock offset and releases the DAG's roots into the live
+worker pool, so concurrent tenants genuinely interleave on the same
+deques, assembly queues and PTT — the same stream contract the
+discrete-event simulator implements, returning the same ``WorkloadResult``.
+
 On a TPU fleet each worker would own a device group and chunks would be
 ``pjit`` calls on its slice; the orchestrators in ``serve_orchestrator`` /
 ``train_orchestrator`` build such TAOs.
@@ -21,7 +28,6 @@ On a TPU fleet each worker would own a device group and chunks would be
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import random
 import threading
 import time
@@ -32,6 +38,7 @@ from .dag import TAO, TaoDag
 from .places import ClusterSpec, leader_of, place_members
 from .policies import Policy
 from .scheduler import SchedulerCore
+from .simulator import TraceRecord
 
 
 @dataclasses.dataclass
@@ -77,8 +84,44 @@ class ThreadedRuntime:
         self._done = threading.Event()
         self._total = 0
         self._error: BaseException | None = None
+        self._t0 = 0.0
+        self._busy = [0.0] * n                 # per-worker busy seconds
+        self._trace: list[TraceRecord] = []    # workload-mode trace
+        self._wl_stats: dict | None = None     # dag_id -> DagStats
+        self._stats_lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
 
     # ------------------------------------------------------------------ admin
+    def _begin_run(self, total: int) -> None:
+        """Per-run reset so one runtime instance supports consecutive runs
+        (stale counters otherwise end a second run prematurely: the
+        cumulative ``core.completed`` is compared against the new total)."""
+        # a worker that outlived a timed-out run (blocked inside a chunk)
+        # must not be revived by the _done.clear() below — it would commit
+        # stale TAOs into the new run's counters/queues; refuse to start
+        # until the old pool has genuinely exited
+        for t in self._threads:
+            if t.is_alive():
+                t.join(timeout=5.0)
+                if t.is_alive():
+                    raise RuntimeError(
+                        "a worker thread from the previous (timed-out) run "
+                        "is still executing its chunk; this runtime cannot "
+                        "start a new run until that work returns")
+        self._threads = []
+        self.core.reset_counters()
+        self._total = total
+        self._done.clear()
+        self._error = None
+        self._trace = []
+        self._wl_stats = None
+        self._busy = [0.0] * self.spec.n_workers
+        for q in self._ready:       # drop leftovers from a timed-out run
+            q.clear()
+        for q in self._assembly:
+            q.clear()
+        self._t0 = time.perf_counter()
+
     def _enqueue_ready(self, tao: TAO, waker: int) -> None:
         placement = self.core.admit(tao, waker)
         with self._qlocks[placement.target]:
@@ -88,8 +131,18 @@ class ThreadedRuntime:
         """Dynamic Place Allocation: push into members' assembly queues."""
         width = tao.assigned_width
         leader = leader_of(popper, width)
+        # the *popper* determines the real place (a steal moves the TAO), so
+        # this — not admission — is where the leader becomes truthful
+        tao.assigned_leader = leader
         ex = _TaoExec(tao, leader, width, self.spec.n_workers)
         ex.start_time = time.perf_counter()
+        if self._wl_stats is not None:
+            st = self._wl_stats.get(tao.dag_id)
+            if st is not None:
+                rel = ex.start_time - self._t0
+                with self._stats_lock:
+                    if rel < st.started:
+                        st.started = rel
         for m in ex.members:
             with self._alocks[m]:
                 self._assembly[m].append(ex)
@@ -115,17 +168,34 @@ class ThreadedRuntime:
             elapsed = time.perf_counter() - ex.leader_start
             self.core.record_time(ex.tao, ex.leader, ex.width, max(elapsed, 1e-9))
         if last:
+            end_rel = time.perf_counter() - self._t0
             for child in self.core.commit_and_wakeup(ex.tao):
                 self._enqueue_ready(child, waker=worker)
+            if self._wl_stats is not None:
+                self._record_completion(ex, end_rel)
             if self.core.completed >= self._total:
                 self._done.set()
+
+    def _record_completion(self, ex: _TaoExec, end_rel: float) -> None:
+        """Workload-mode accounting: per-DAG table + trace record."""
+        tao = ex.tao
+        with self._stats_lock:
+            self._trace.append(TraceRecord(
+                tao.id, tao.type, ex.leader, ex.width,
+                ex.start_time - self._t0, end_rel, tuple(ex.members),
+                dag_id=tao.dag_id))
+            st = self._wl_stats.get(tao.dag_id)
+            if st is not None:
+                st.record_completion(end_rel)
 
     def _try_assembly(self, worker: int) -> bool:
         with self._alocks[worker]:
             ex = self._assembly[worker].popleft() if self._assembly[worker] else None
         if ex is None:
             return False
+        t_in = time.perf_counter()
         self._execute_chunks(ex, worker)
+        self._busy[worker] += time.perf_counter() - t_in
         return True
 
     def _try_ready(self, worker: int, victim: int) -> bool:
@@ -157,21 +227,19 @@ class ThreadedRuntime:
             self._done.set()
 
     # ------------------------------------------------------------------ run
-    def run(self, dag: TaoDag, timeout_s: float = 600.0) -> dict:
-        roots = self.core.prepare(dag)
-        self._total = len(dag)
-        self._done.clear()
-        for r in roots:
-            self._enqueue_ready(r, waker=0)
+    def _run_workers(self, timeout_s: float) -> float:
+        """Spawn the worker pool, wait for completion, join, re-raise.
+
+        Returns the elapsed wall-clock since ``_begin_run`` set ``_t0``."""
         threads = [
             threading.Thread(target=self._worker_loop, args=(i,), daemon=True)
             for i in range(self.spec.n_workers)
         ]
-        t0 = time.perf_counter()
+        self._threads = threads
         for t in threads:
             t.start()
         finished = self._done.wait(timeout=timeout_s)
-        elapsed = time.perf_counter() - t0
+        elapsed = time.perf_counter() - self._t0
         self._done.set()
         for t in threads:
             t.join(timeout=5.0)
@@ -179,10 +247,79 @@ class ThreadedRuntime:
             raise self._error
         if not finished:
             raise TimeoutError(
-                f"DAG did not complete in {timeout_s}s "
+                f"run did not complete in {timeout_s}s "
                 f"({self.core.completed}/{self._total} TAOs)")
+        return elapsed
+
+    def run(self, dag: TaoDag, timeout_s: float = 600.0) -> dict:
+        """Execute one DAG offline (all roots ready at t=0)."""
+        self._begin_run(len(dag))
+        roots = self.core.prepare(dag)
+        for r in roots:
+            self._enqueue_ready(r, waker=0)
+        elapsed = self._run_workers(timeout_s)
         return {
             "elapsed_s": elapsed,
             "throughput_taos_per_s": self._total / elapsed if elapsed > 0 else 0.0,
             "completed": self.core.completed,
         }
+
+    # ------------------------------------------------------------- workload
+    def _admit_arrivals(self, arrivals: list) -> None:
+        """Timer thread: release each DAG's roots at its wall-clock offset."""
+        try:
+            for arr in arrivals:
+                delay = arr.at - (time.perf_counter() - self._t0)
+                if delay > 0 and self._done.wait(timeout=delay):
+                    return          # run ended (error/timeout) mid-stream
+                if self._done.is_set():
+                    return
+                roots = self.core.prepare(arr.dag, dag_id=arr.dag_id)
+                for r in roots:
+                    self._enqueue_ready(r, waker=0)
+        except BaseException as e:  # surface admission crashes to run_workload
+            self._error = e
+            self._done.set()
+
+    def run_workload(self, workload, timeout_s: float = 600.0):
+        """Execute a multi-DAG arrival stream on the live worker pool.
+
+        The same contract as :meth:`Simulator.run_workload`: DAGs are
+        admitted at their ``DagArrival.at`` offsets (here: real wall-clock
+        seconds after the run starts), nodes are namespaced via
+        ``SchedulerCore.prepare(dag, dag_id)``, and the returned
+        ``WorkloadResult`` carries the per-DAG latency table (arrival /
+        queue delay / makespan / sojourn, all relative to run start) plus
+        the executed trace."""
+        from .workload import DagStats, WorkloadResult
+        arrivals = workload.arrivals()
+        total = workload.total_taos()
+        self._begin_run(total)
+        stats = {
+            a.dag_id: DagStats.for_arrival(a.dag_id, a.name, a.at,
+                                           len(a.dag))
+            for a in arrivals
+        }
+        self._wl_stats = stats
+        live = [a for a in arrivals if len(a.dag) > 0]
+        if live:
+            admitter = threading.Thread(target=self._admit_arrivals,
+                                        args=(live,), daemon=True)
+            admitter.start()
+            try:
+                elapsed = self._run_workers(timeout_s)
+            finally:
+                self._done.set()
+                admitter.join(timeout=5.0)
+        else:
+            elapsed = 0.0
+        n = self.spec.n_workers
+        completed = self.core.completed
+        return WorkloadResult(
+            makespan=elapsed,
+            throughput=completed / elapsed if elapsed > 0 else 0.0,
+            completed=completed,
+            utilization=sum(self._busy) / (elapsed * n) if elapsed > 0 else 0.0,
+            trace=list(self._trace),
+            per_dag=stats,
+        )

@@ -11,19 +11,25 @@ from __future__ import annotations
 import heapq
 import random
 import threading
-from typing import Iterable
 
 from .dag import TAO, TaoDag
-from .places import ClusterSpec, leader_of
+from .places import ClusterSpec
 from .policies import Placement, Policy
 from .ptt import PTTRegistry
 
 
 class _CritMultiset:
-    """Max-query multiset of criticalities (lazy-deletion heap)."""
+    """Max-query multiset of criticalities (lazy-deletion heap).
+
+    ``max()`` prunes dead heap entries lazily, but a long-lived namespace
+    that keeps adding *descending* criticalities (a chain drains root-first)
+    never pops them — so ``remove`` drops zeroed counts eagerly and compacts
+    the heap once stale entries outnumber live distinct values: memory stays
+    bounded by the number of criticalities currently in flight.
+    """
 
     def __init__(self) -> None:
-        self._heap: list[int] = []      # negated values
+        self._heap: list[int] = []      # negated values; may hold stale dupes
         self._count: dict[int, int] = {}
         self._size = 0
 
@@ -36,8 +42,16 @@ class _CritMultiset:
         c = self._count.get(v, 0)
         if c <= 0:
             raise KeyError(f"criticality {v} not present")
-        self._count[v] = c - 1
+        if c == 1:
+            del self._count[v]
+        else:
+            self._count[v] = c - 1
         self._size -= 1
+        # heap entries for values with no live count are stale; rebuild from
+        # the live distinct values when they dominate (amortized O(1))
+        if len(self._heap) > 2 * max(len(self._count), 4):
+            self._heap = [-u for u in self._count]
+            heapq.heapify(self._heap)
 
     def max(self) -> int:
         while self._heap:
@@ -67,12 +81,25 @@ class SchedulerCore:
         # critical even while a 3000-node DAG holds criticality 800).
         self._crit: dict[int, _CritMultiset] = {}
         self._in_flight = 0           # ready+running TAOs (molding load signal)
+        self._in_flight_ns: dict[int, int] = {}   # per-namespace breakdown
         self._completed = 0
         self._lock = threading.RLock()
 
     # -- SchedulerContext ----------------------------------------------------
-    def system_load(self) -> int:
-        return self._in_flight
+    def system_load(self, namespace: int | None = None) -> int:
+        """Ready+running TAOs — globally, or for one DAG namespace.
+
+        Workload-aware molding sizes widths from the *tenant's* own load
+        (``namespace=tao.dag_id``) so a small DAG arriving during another
+        tenant's burst still sees idle headroom; the global counter stays
+        the legacy signal for single-DAG runs."""
+        if namespace is None:
+            return self._in_flight
+        return self._in_flight_ns.get(namespace, 0)
+
+    def active_namespaces(self) -> int:
+        """Number of DAG namespaces with at least one ready/running TAO."""
+        return len(self._in_flight_ns)
 
     def running_max_criticality(self, namespace: int = 0) -> int:
         ms = self._crit.get(namespace)
@@ -89,12 +116,16 @@ class SchedulerCore:
             width = self._clamp_width(placement.width)
             target = placement.target % self.spec.n_workers
             tao.assigned_width = width
-            tao.assigned_leader = leader_of(target, width)
+            # assigned_leader stays -1 here: the real place is derived from
+            # the *popper* at DPA time (a steal moves it), so the vehicles
+            # stamp it when the TAO is actually distributed/started.
             ms = self._crit.get(tao.dag_id)
             if ms is None:
                 ms = self._crit[tao.dag_id] = _CritMultiset()
             ms.add(tao.criticality)
             self._in_flight += 1
+            self._in_flight_ns[tao.dag_id] = \
+                self._in_flight_ns.get(tao.dag_id, 0) + 1
             return Placement(target=target, width=width)
 
     def commit_and_wakeup(self, tao: TAO) -> list[TAO]:
@@ -110,6 +141,11 @@ class SchedulerCore:
                 # namespaces so memory stays bounded by concurrency
                 del self._crit[tao.dag_id]
             self._in_flight -= 1
+            left = self._in_flight_ns[tao.dag_id] - 1
+            if left:
+                self._in_flight_ns[tao.dag_id] = left
+            else:
+                del self._in_flight_ns[tao.dag_id]
             self._completed += 1
             ready = []
             for child in tao.children:
@@ -117,6 +153,23 @@ class SchedulerCore:
                 if child.pending == 0:
                     ready.append(child)
             return ready
+
+    def reset_counters(self) -> None:
+        """Zero the per-run state so one core instance can execute
+        consecutive runs.
+
+        Both vehicles call this at the top of ``run``/``run_workload``:
+        without it a second run on the same instance compares the
+        *cumulative* completed count against the new run's total (ending
+        prematurely in the threaded runtime, inflating ``completed`` /
+        ``throughput`` in the simulator).  The PTT and any adaptive policy
+        state survive deliberately — learned performance history is the
+        point of reuse."""
+        with self._lock:
+            self._completed = 0
+            self._in_flight = 0
+            self._in_flight_ns.clear()
+            self._crit.clear()
 
     def record_time(self, tao: TAO, leader: int, width: int, elapsed: float) -> None:
         """Leader-only PTT update (the vehicles enforce leader discipline)."""

@@ -228,6 +228,9 @@ class Simulator:
 
     def _execute(self, arrivals: list, max_events: int | None):
         from .workload import DagStats, WorkloadResult
+        # per-run counter reset: a reused Simulator must not report the
+        # previous runs' completions in this run's completed/throughput
+        self.core.reset_counters()
         n_workers = self.spec.n_workers
         fast = self.fast_dispatch
 
@@ -284,6 +287,10 @@ class Simulator:
             model = self.models[tao.type]
             width = tao.assigned_width
             leader = leader_of(popper, width)
+            # the popper (possibly a stealer) fixes the real place; admission
+            # leaves assigned_leader at -1 so trace consumers never see a
+            # leader the steal invalidated
+            tao.assigned_leader = leader
             members = [m for m in place_members(leader, width)
                        if m < n_workers and m not in self.failed]
             if not members:
@@ -398,11 +405,8 @@ class Simulator:
             if kind == ARRIVE:
                 dag_id, dag, name = payload
                 roots = self.core.prepare(dag, dag_id=dag_id)
-                st = DagStats(dag_id=dag_id, name=name,
-                              arrival=now, n_taos=len(dag))
+                st = DagStats.for_arrival(dag_id, name, now, len(dag))
                 stats[dag_id] = st
-                if st.n_taos == 0:   # degenerate: an empty DAG is done on arrival
-                    st.started = st.finished = now
                 for r in roots:
                     enqueue_ready(r, waker=0, t0=now)
                 continue
@@ -417,9 +421,7 @@ class Simulator:
                 enqueue_ready(child, waker=rec.leader, t0=now)
             st = stats.get(tao.dag_id)
             if st is not None:
-                st.completed += 1
-                if st.completed == st.n_taos:
-                    st.finished = now
+                st.record_completion(now)
             # freed members look for work
             for m in rec.participants:
                 if free_time[m] <= now + 1e-12 and m not in self.failed:

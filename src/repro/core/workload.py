@@ -19,13 +19,17 @@ Criticality namespaces: each admitted DAG keeps its own criticality scale
 (a 5-node DAG's root must still count as critical next to a 3000-node
 tenant), which ``SchedulerCore`` implements as per-``dag_id`` multisets.
 
-This module holds only data/aggregation; the event loop that executes a
-``Workload`` lives in :meth:`repro.core.simulator.Simulator.run_workload`.
+This module holds only data/aggregation; execution is vehicle-agnostic —
+:meth:`repro.core.simulator.Simulator.run_workload` replays the stream in
+virtual time, :meth:`repro.core.runtime.ThreadedRuntime.run_workload`
+admits the same stream at real wall-clock offsets into the live thread
+pool.  Both return a ``WorkloadResult``.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Iterable, Sequence
 
 from .dag import TaoDag
@@ -116,24 +120,59 @@ class DagStats:
     finished: float = float("nan")   # last TAO completion
     completed: int = 0               # TAOs committed so far
 
+    @classmethod
+    def for_arrival(cls, dag_id: int, name: str, arrival: float,
+                    n_taos: int) -> "DagStats":
+        """Stats entry for a DAG joining the system; both execution
+        vehicles use this so the degenerate rule (an empty DAG is done on
+        arrival) lives in exactly one place."""
+        st = cls(dag_id=dag_id, name=name, arrival=arrival, n_taos=n_taos)
+        if n_taos == 0:
+            st.started = st.finished = arrival
+        return st
+
+    def record_completion(self, t: float) -> None:
+        """One TAO of this DAG committed at time ``t``; the last one stamps
+        the completion time (shared by both execution vehicles)."""
+        self.completed += 1
+        if self.completed == self.n_taos:
+            self.finished = t
+
     @property
     def done(self) -> bool:
         return self.completed == self.n_taos
 
     @property
+    def has_started(self) -> bool:
+        return math.isfinite(self.started)
+
+    @property
+    def has_finished(self) -> bool:
+        return math.isfinite(self.finished)
+
+    # Derived latencies are nan (not inf / inf-inf garbage) until the DAG
+    # actually reaches the corresponding lifecycle point, so per-tenant
+    # tables of partially-run streams aggregate and print sanely.
+    @property
     def sojourn(self) -> float:
         """End-to-end latency the tenant observes: completion - arrival."""
+        if not self.has_finished:
+            return float("nan")
         return self.finished - self.arrival
 
     @property
     def makespan(self) -> float:
         """Pure execution span: completion - first TAO start (excludes
         queueing of the roots behind other tenants)."""
+        if not (self.has_started and self.has_finished):
+            return float("nan")
         return self.finished - self.started
 
     @property
     def queue_delay(self) -> float:
         """Time the DAG's first TAO waited behind other tenants."""
+        if not self.has_started:
+            return float("nan")
         return self.started - self.arrival
 
 

@@ -18,7 +18,7 @@ class _Ctx(SchedulerCore):
         self._load = load
         self._max_crit = max_crit
 
-    def system_load(self):
+    def system_load(self, namespace=None):
         return self._load
 
     def running_max_criticality(self, namespace=0):

@@ -1,0 +1,178 @@
+"""Threaded-runtime workload execution: online arrivals on real threads.
+
+The tentpole contract: ``ThreadedRuntime.run_workload`` executes the same
+``Workload`` abstraction as ``Simulator.run_workload`` — timer-thread
+admission at wall-clock offsets, per-namespace TAO tagging, per-DAG latency
+accounting — and returns the same ``WorkloadResult`` shape, so the two
+vehicles are directly comparable on one stream.  TAOs here carry either no
+payload (no-op chunks) or counting chunks, so the tests exercise the online
+scheduling machinery, not kernel runtimes.
+"""
+import math
+import threading
+
+import pytest
+
+from repro.core import (ChunkedWork, Simulator, TaoDag, ThreadedRuntime,
+                        Workload, WorkloadResult, chain, hikey960,
+                        make_policy, random_dag, random_workload)
+
+
+def _small_workload(seed=0, n_dags=4, n_tasks=25, rate=50.0):
+    """A compressed stream: arrivals within a few tens of milliseconds so
+    real wall-clock execution stays fast."""
+    return random_workload(n_dags=n_dags, rate=rate, n_tasks=n_tasks,
+                           seed=seed)
+
+
+# ------------------------------------------------------------ basic stream --
+@pytest.mark.parametrize("policy", ["homogeneous", "crit-aware",
+                                    "molding:adaptive"])
+def test_threaded_workload_completes_with_conservation(policy):
+    wl = _small_workload(seed=1)
+    rt = ThreadedRuntime(hikey960(), make_policy(policy), seed=0)
+    res = rt.run_workload(wl, timeout_s=60.0)
+    assert isinstance(res, WorkloadResult)
+    assert res.completed == wl.total_taos()
+    # per-DAG conservation: every admitted DAG finished all of its TAOs
+    for arr in wl:
+        st = res.per_dag[arr.dag_id]
+        assert st.done and st.completed == len(arr.dag)
+        assert st.arrival == arr.at
+        assert st.has_started and st.has_finished
+        assert st.started >= st.arrival - 1e-9   # admitted at/after offset
+        assert st.finished >= st.started
+        assert st.sojourn >= st.makespan - 1e-9
+        assert st.queue_delay >= -1e-9
+    # trace conservation: each (dag_id, tao_id) executed exactly once
+    seen = {(rec.dag_id, rec.tao_id) for rec in res.trace}
+    assert len(res.trace) == len(seen) == wl.total_taos()
+    assert res.sojourn_p50() > 0 and not math.isnan(res.sojourn_p99())
+    assert 0.0 < res.utilization <= 1.0
+
+
+def test_threaded_workload_executes_real_chunks():
+    wl = Workload()
+    counters, lock = {}, threading.Lock()
+    for s in range(3):
+        dag = random_dag(20, target_degree=2.5, seed=s)
+        for node in dag.nodes:
+            def chunk(i, key=(s, node.id)):
+                with lock:
+                    counters[key] = counters.get(key, 0) + 1
+            node.work = ChunkedWork(chunk, n_chunks=2)
+        wl.add(dag, at=0.01 * s, name=f"t{s}")
+    rt = ThreadedRuntime(hikey960(), make_policy("molding:crit-ptt"), seed=2)
+    res = rt.run_workload(wl, timeout_s=60.0)
+    assert res.completed == 60
+    assert len(counters) == 60
+    assert all(v == 2 for v in counters.values())
+
+
+def test_threaded_workload_empty_and_degenerate_dags():
+    wl = Workload()
+    wl.add(TaoDag(), at=0.0, name="empty")          # zero TAOs
+    solo = TaoDag()
+    solo.add_task("matmul")
+    wl.add(solo, at=0.01, name="solo")
+    rt = ThreadedRuntime(hikey960(), make_policy("homogeneous"), seed=0)
+    res = rt.run_workload(wl, timeout_s=30.0)
+    assert res.completed == 1
+    empty = res.per_dag[1]
+    assert empty.done and empty.n_taos == 0
+    assert empty.sojourn == 0.0                     # done on arrival
+    assert res.per_dag[2].done
+
+
+def test_threaded_workload_worker_exception_propagates():
+    wl = Workload()
+    bad = TaoDag()
+
+    def boom(i):
+        raise RuntimeError("stream kaboom")
+
+    bad.add_task("k", work=ChunkedWork(boom, 1))
+    wl.add(bad, at=0.0)
+    rt = ThreadedRuntime(hikey960(), make_policy("homogeneous"), seed=0)
+    with pytest.raises(RuntimeError, match="stream kaboom"):
+        rt.run_workload(wl, timeout_s=10.0)
+
+
+# -------------------------------------------------------------- reuse bugs --
+def test_reused_threaded_runtime_completes_second_run():
+    """Regression: stale cumulative counters used to satisfy
+    ``completed >= total`` instantly, ending a second run before any work."""
+    rt = ThreadedRuntime(hikey960(), make_policy("homogeneous"), seed=0)
+    out1 = rt.run(random_dag(30, target_degree=3.0, seed=0), timeout_s=30)
+    assert out1["completed"] == 30
+
+    dag2 = random_dag(18, target_degree=2.0, seed=1)
+    ran, lock = [], threading.Lock()
+    for node in dag2.nodes:
+        def chunk(i, node_id=node.id):
+            with lock:
+                ran.append(node_id)
+        node.work = ChunkedWork(chunk, 1)
+    out2 = rt.run(dag2, timeout_s=30)
+    assert out2["completed"] == 18                 # per-run, not cumulative
+    assert len(ran) == 18                          # the work actually ran
+
+
+def test_reused_threaded_runtime_workload_then_single_dag():
+    rt = ThreadedRuntime(hikey960(), make_policy("molding:adaptive"), seed=1)
+    wl = _small_workload(seed=3, n_dags=3, n_tasks=15)
+    r1 = rt.run_workload(wl, timeout_s=60.0)
+    assert r1.completed == wl.total_taos()
+    out = rt.run(random_dag(12, target_degree=2.0, seed=4), timeout_s=30)
+    assert out["completed"] == 12
+
+
+# ----------------------------------------------------- sim/threaded parity --
+def test_sim_and_threaded_execute_same_stream():
+    """Parity smoke: one stream, both vehicles, both conserve per-DAG work
+    and produce the same WorkloadResult surface."""
+    def build():
+        wl = Workload.from_trace([
+            (0.00, random_dag(30, target_degree=3.03, seed=10), "a"),
+            (0.02, random_dag(10, target_degree=1.62, seed=11), "b"),
+            (0.04, random_dag(10, target_degree=1.62, seed=12), "c"),
+        ])
+        return wl
+
+    results = {}
+    wl_sim = build()
+    results["sim"] = Simulator(
+        hikey960(), make_policy("crit-aware"), seed=0).run_workload(wl_sim)
+    wl_thr = build()
+    results["threaded"] = ThreadedRuntime(
+        hikey960(), make_policy("crit-aware"), seed=0).run_workload(
+            wl_thr, timeout_s=60.0)
+
+    for name, res in results.items():
+        assert res.completed == 50, name
+        assert set(res.per_dag) == {1, 2, 3}, name
+        for st in res.per_dag.values():
+            assert st.done, (name, st)
+            assert st.has_started and st.has_finished, (name, st)
+        # same accounting surface on both vehicles
+        assert len(res.sojourns()) == 3, name
+        assert res.sojourn_p50() > 0, name
+    # per-DAG TAO counts agree exactly between vehicles
+    assert {i: s.n_taos for i, s in results["sim"].per_dag.items()} == \
+           {i: s.n_taos for i, s in results["threaded"].per_dag.items()}
+    assert {i: s.completed for i, s in results["sim"].per_dag.items()} == \
+           {i: s.completed for i, s in results["threaded"].per_dag.items()}
+
+
+def test_threaded_assigned_leader_stamped_at_dpa_time():
+    """After a run every executed TAO carries the leader of the place it
+    actually ran on (stamped at DPA), consistent with its trace record."""
+    from repro.core import leader_of
+    wl = _small_workload(seed=5, n_dags=2, n_tasks=20)
+    rt = ThreadedRuntime(hikey960(), make_policy("homogeneous"), seed=3)
+    res = rt.run_workload(wl, timeout_s=60.0)
+    by_node = {(a.dag_id, n.id): n for a in wl for n in a.dag.nodes}
+    for rec in res.trace:
+        tao = by_node[(rec.dag_id, rec.tao_id)]
+        assert tao.assigned_leader == rec.leader
+        assert leader_of(rec.leader, rec.width) == rec.leader

@@ -14,7 +14,7 @@ class _Ctx(SchedulerCore):
         super().__init__(spec, HomogeneousPolicy(), seed=seed)
         self._load = load
 
-    def system_load(self):
+    def system_load(self, namespace=None):
         return self._load
 
 
@@ -50,7 +50,9 @@ def test_admit_applies_clamp_to_policy_width():
     p = core.admit(tao, waker=5)
     assert p.width == 2                       # 3 rounds down to 2
     assert tao.assigned_width == 2
-    assert tao.assigned_leader == (p.target // 2) * 2
+    # the real leader is only known at DPA time (a steal moves the place),
+    # so admission must leave the field unset rather than record a guess
+    assert tao.assigned_leader == -1
 
 
 def test_single_worker_pool_always_width_1():
@@ -138,6 +140,74 @@ def test_molding_history_only_consults_leader_aligned_widths():
     pol = MoldingPolicy(HomogeneousPolicy())
     p = pol.place(TAO(type="matmul", width_hint=1), ctx, waker=5)
     assert p == Placement(target=5, width=1)
+
+
+# ------------------------------------------- molding: per-namespace load --
+def _saturate_big_tenant(core, n_admitted=12):
+    """A 'large tenant' (namespace 1) with enough ready TAOs to push the
+    *global* in-flight counter past the pool size."""
+    from repro.core import TaoDag
+    big = TaoDag()
+    for _ in range(20):
+        big.add_task("matmul")               # independent: all roots
+    roots = core.prepare(big, dag_id=1)
+    for n in roots[:n_admitted]:
+        core.admit(n, waker=0)
+    return big, roots
+
+
+def test_small_tenant_widens_while_large_tenant_saturates_global_load():
+    from repro.core import TaoDag, chain
+    spec = hikey960()
+    core = SchedulerCore(spec, MoldingPolicy(HomogeneousPolicy()), seed=0)
+    big, roots = _saturate_big_tenant(core)
+    assert core.system_load() > spec.n_workers        # globally saturated
+    assert core.system_load(1) > spec.n_workers
+    assert core.active_namespaces() == 1
+
+    # the large tenant's own TAOs get no load-based widening (quota busy)
+    p_big = core.policy.place(roots[15], core, waker=0)
+    assert p_big.width == 1
+
+    # a small tenant arriving mid-burst still sees its own idle namespace
+    small = TaoDag()
+    chain(small, "sort", 2)
+    sroot = core.prepare(small, dag_id=2)[0]
+    p = core.admit(sroot, waker=0)
+    assert p.width > 1
+    assert p.width == spec.max_width        # full quota: sole other tenant
+
+
+def test_fair_share_splits_quota_across_active_namespaces():
+    from repro.core import TaoDag, chain
+    spec = hikey960()
+    core = SchedulerCore(spec, MoldingPolicy(HomogeneousPolicy()), seed=0)
+    _saturate_big_tenant(core)
+
+    small = TaoDag()
+    chain(small, "sort", 3)
+    sroot = core.prepare(small, dag_id=2)[0]
+    core.admit(sroot, waker=0)              # namespace 2 now active too
+    assert core.active_namespaces() == 2
+
+    # next small-tenant TAO: quota 8//2=4, own load 1 -> width 4, not 8
+    follow = small.nodes[1]
+    p = core.policy.place(follow, core, waker=0)
+    assert p.width == 4
+
+
+def test_molding_global_flag_keeps_legacy_counter_semantics():
+    from repro.core import TaoDag, chain
+    spec = hikey960()
+    core = SchedulerCore(spec, make_policy("molding-global:homogeneous"),
+                         seed=0)
+    _saturate_big_tenant(core)
+    small = TaoDag()
+    chain(small, "sort", 2)
+    sroot = core.prepare(small, dag_id=2)[0]
+    # legacy global counter: saturated pool -> no widening for anyone
+    p = core.admit(sroot, waker=0)
+    assert p.width == 1
 
 
 def test_molding_composes_with_clamp_on_admission():

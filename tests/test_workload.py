@@ -163,6 +163,92 @@ def test_percentile_nearest_rank():
         percentile([1.0], 101)
 
 
+def test_percentile_edge_quantiles_and_single_element():
+    # q=0 -> min, q=100 -> max (nearest-rank never indexes out of range)
+    vals = [5.0, 9.0, 1.0, 7.0, 3.0]
+    assert percentile(vals, 0) == 1.0
+    assert percentile(vals, 100) == 9.0
+    # a single element answers every quantile
+    for q in (0, 1, 50, 99, 100):
+        assert percentile([2.5], q) == 2.5
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+
+
+def test_dagstats_nan_for_never_started_or_finished():
+    from repro.core import DagStats
+    st = DagStats(dag_id=1, name="t", arrival=0.5, n_taos=4)
+    # never started: every derived latency is nan, not inf/inf-inf garbage
+    assert not st.has_started and not st.has_finished
+    assert math.isnan(st.queue_delay)
+    assert math.isnan(st.makespan)
+    assert math.isnan(st.sojourn)
+    # started but unfinished: queue delay is real, the rest still nan
+    st.started = 0.7
+    assert st.queue_delay == pytest.approx(0.2)
+    assert math.isnan(st.makespan) and math.isnan(st.sojourn)
+    st.finished = 1.5
+    st.completed = 4
+    assert st.done
+    assert st.makespan == pytest.approx(0.8)
+    assert st.sojourn == pytest.approx(1.0)
+
+
+# ----------------------------------------------------- state reuse / leaks --
+def test_reused_simulator_reports_per_run_counts():
+    """Regression: a second run on the same Simulator must not report the
+    previous run's completions in completed/throughput."""
+    sim = Simulator(hikey960(), make_policy("crit-aware"), seed=0)
+    r1 = sim.run(random_dag(40, target_degree=3.0, seed=0))
+    assert r1.completed == 40
+    r2 = sim.run(random_dag(25, target_degree=2.0, seed=1))
+    assert r2.completed == 25          # not 65
+    assert sim.core.completed == 25
+    assert r2.per_dag[0].completed == 25
+    assert r2.throughput == pytest.approx(25 / r2.makespan)
+
+
+def test_reused_simulator_workload_then_single_dag():
+    sim = Simulator(hikey960(), make_policy("molding:adaptive"), seed=0)
+    wl = random_workload(n_dags=3, rate=8.0, n_tasks=30, seed=1)
+    r1 = sim.run_workload(wl)
+    assert r1.completed == wl.total_taos() == 90
+    r2 = sim.run(random_dag(20, target_degree=2.0, seed=2))
+    assert r2.completed == 20
+    assert set(r2.per_dag) == {0}
+
+
+def test_crit_multiset_stays_bounded_on_long_stream():
+    """Regression: a long-lived namespace draining root-first (descending
+    criticalities) must not accumulate dead heap entries / zeroed counts."""
+    from repro.core.scheduler import _CritMultiset
+    ms = _CritMultiset()
+    # ascending stream: each removed value is *buried* under the new live
+    # max, so the lazy pruning in max() never reaches it — only the
+    # eager compaction in remove() can keep the heap bounded
+    prev = None
+    for v in range(1, 10_001):
+        ms.add(v)
+        if prev is not None:
+            ms.remove(prev)
+        assert ms.max() == v
+        prev = v
+    assert len(ms) == 1
+    assert len(ms._heap) <= 16          # compacted, not ~10k stale entries
+    assert set(ms._count) == {10_000}   # zeroed counts dropped
+    ms.remove(10_000)
+    assert len(ms) == 0 and ms.max() == 0
+    # still correct after the churn, duplicates included
+    ms.add(7)
+    ms.add(7)
+    ms.add(3)
+    assert ms.max() == 7
+    ms.remove(7)
+    assert ms.max() == 7
+    ms.remove(7)
+    assert ms.max() == 3
+
+
 def test_workload_result_reports_sojourn_percentiles():
     _, res = _run(n_dags=7)
     so = sorted(res.sojourns())
