@@ -1,0 +1,246 @@
+"""Scheduler hot-path microbenchmarks -> ``BENCH_sched.json``.
+
+The paper's pitch is *low-overhead* online scheduling, so the scheduler's
+own cost is a first-class metric.  This suite times every per-TAO operation
+on the placement path — ``record`` / ``best_leader`` / ``cluster_time``
+(PTT), ``place`` (policy), ``admit``+``commit`` (SchedulerCore) and the
+interference query (simulator) — at 64/256/1000-worker fleets, for both the
+incremental fast paths (default) and the O(n_workers)-scan baselines
+(``fast_query=False`` / ``fast_dispatch=False``), and then runs the
+end-to-end multi-DAG stream on both.
+
+Two outputs:
+
+* a **correctness gate** — the fast and slow paths must schedule
+  *byte-identically* (same trace for the same seed).  The exit status is
+  non-zero iff that check fails; wall-clock is never asserted (CI runners
+  are noisy).
+* ``BENCH_sched.json`` — the measured numbers, committed so future PRs have
+  a perf trajectory to compare against.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/perf.py            # full, all sizes
+    PYTHONPATH=src python benchmarks/perf.py --quick    # CI smoke (small)
+    PYTHONPATH=src python benchmarks/perf.py --out /tmp/bench.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+import sys
+import time
+
+FULL_SIZES = (64, 256, 1000)
+QUICK_SIZES = (64, 256)
+
+
+def timed_us(fn, min_time: float = 0.05, max_number: int = 200_000) -> float:
+    """Adaptive best-of timing: microseconds per call of ``fn``."""
+    number = 1
+    while True:
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        dt = time.perf_counter() - t0
+        if dt >= min_time or number >= max_number:
+            return dt / number * 1e6
+        number = min(max_number, max(number * 2, int(number * min_time / max(dt, 1e-9))))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.3f},{derived}", flush=True)
+
+
+def make_spec(n_workers: int):
+    from repro.core import fleet
+    return fleet(n_workers * 3 // 4, n_workers // 4)
+
+
+# ---------------------------------------------------------------------------
+# PTT microbenches: record / best_leader / cluster_time
+# ---------------------------------------------------------------------------
+def populate(table, spec, base: float = 1.0) -> None:
+    """Record one sample into every eligible (leader, width) cell."""
+    for width in spec.widths:
+        for i, leader in enumerate(spec.eligible_leaders(width)):
+            table.record(leader, width, base + 0.001 * i + 0.01 * width)
+
+
+def bench_ptt(spec) -> dict:
+    from repro.core import PTT
+
+    out = {}
+    fast, slow = PTT(spec), PTT(spec, fast_query=False)
+    populate(fast, spec)
+    populate(slow, spec)
+
+    n = spec.n_workers
+    counter = [0]
+
+    def do_record(table):
+        i = counter[0] = counter[0] + 1
+        table.record(i % n, 1, 1.0 + (i % 7) * 0.01)
+
+    out["ptt_record"] = timed_us(lambda: do_record(fast))
+    out["ptt_best_leader_fast"] = timed_us(lambda: fast.best_leader(1))
+    out["ptt_best_leader_slow"] = timed_us(lambda: slow.best_leader(1))
+    bigs = spec.big_workers
+    out["ptt_cluster_time_fast"] = timed_us(lambda: fast.cluster_time(bigs, 1))
+    out["ptt_cluster_time_slow"] = timed_us(lambda: slow.cluster_time(bigs, 1))
+    # sanity: fast and slow queries agree exactly on the same history
+    assert fast.best_leader(2) == slow.best_leader(2)
+    assert fast.cluster_time(bigs, 2) == slow.cluster_time(bigs, 2)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SchedulerCore microbenches: place / admit+commit
+# ---------------------------------------------------------------------------
+def bench_core(spec, fast_query: bool) -> dict:
+    from repro.core import SchedulerCore, TaoDag, chain, make_policy
+
+    suffix = "fast" if fast_query else "slow"
+    core = SchedulerCore(spec, make_policy("molding:adaptive"),
+                         seed=0, fast_query=fast_query)
+    for t in ("matmul", "sort", "copy"):
+        populate(core.ptt.table(t), spec)
+
+    dag = TaoDag()
+    chain(dag, "matmul", 64, width_hint=1)
+    probe = core.prepare(dag)[0]
+    out = {f"policy_place_{suffix}":
+           timed_us(lambda: core.policy.place(probe, core, 0))}
+
+    def admit_commit_chain():
+        d = TaoDag()
+        chain(d, "sort", 256, width_hint=1)
+        ready = list(core.prepare(d))
+        while ready:
+            t = ready.pop()
+            core.admit(t, 0)
+            ready.extend(core.commit_and_wakeup(t))
+
+    out[f"admit_commit_{suffix}"] = timed_us(admit_commit_chain,
+                                             min_time=0.1) / 256
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Interference accounting: O(1) counters vs the seed running-TAO rescan
+# ---------------------------------------------------------------------------
+def bench_interference(spec, n_running: int = 64) -> dict:
+    from repro.core.simulator import _InterferenceTracker
+
+    tracker = _InterferenceTracker()
+    running = []        # (type, participants) — what the seed path scanned
+    kinds = ("matmul", "sort", "copy")
+    for i in range(n_running):
+        members = tuple(range((i * 8) % spec.n_workers,
+                              (i * 8) % spec.n_workers + 4))
+        type_ = kinds[i % 3]
+        running.append((type_, members))
+        tracker.start(type_, frozenset(spec.class_of(m) for m in members))
+
+    probe = frozenset({spec.class_of(0)})
+
+    def slow_query():
+        n = 0
+        for rtype, participants in running:
+            if rtype == "copy" and any(
+                spec.class_of(m) in probe for m in participants
+            ):
+                n += 1
+        return n
+
+    assert tracker.query("copy", probe) == slow_query()
+    return {
+        "interference_query_fast": timed_us(
+            lambda: tracker.query("copy", probe)),
+        "interference_query_slow": timed_us(slow_query),
+    }
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the multi-DAG stream, fast vs slow, trace equality
+# ---------------------------------------------------------------------------
+def bench_end_to_end(spec, n_dags: int, n_tasks: int, seed: int = 1) -> dict:
+    from repro.core import Simulator, make_policy, random_workload
+
+    def run(fast: bool):
+        wl = random_workload(n_dags=n_dags, rate=4.0, n_tasks=n_tasks, seed=0)
+        sim = Simulator(spec, make_policy("molding:adaptive"), seed=seed,
+                        fast_dispatch=fast, fast_query=fast)
+        t0 = time.perf_counter()
+        res = sim.run_workload(wl)
+        return time.perf_counter() - t0, res
+
+    t_fast, r_fast = run(True)
+    t_slow, r_slow = run(False)
+    key = lambda res: [dataclasses.astuple(t) for t in res.trace]
+    equal = key(r_fast) == key(r_slow)
+    return {
+        "n_taos": r_fast.completed,
+        "fast_s": round(t_fast, 4),
+        "slow_s": round(t_slow, 4),
+        "speedup": round(t_slow / t_fast, 2) if t_fast > 0 else float("inf"),
+        "trace_equal": equal,
+    }
+
+
+# ---------------------------------------------------------------------------
+def main() -> int:
+    args = sys.argv[1:]
+    quick = "--quick" in args
+    out_path = "BENCH_sched.json"
+    if "--out" in args:
+        out_path = args[args.index("--out") + 1]
+    sizes = QUICK_SIZES if quick else FULL_SIZES
+    # stream sized so the slow baseline stays seconds, not minutes
+    n_dags, n_tasks = (6, 60) if quick else (8, 150)
+
+    print("name,us_per_call,derived")
+    report = {
+        "schema": "bench_sched/v1",
+        "quick": quick,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "stream": {"n_dags": n_dags, "n_tasks": n_tasks,
+                   "policy": "molding:adaptive"},
+        "sizes": {},
+    }
+    ok = True
+    for n in sizes:
+        spec = make_spec(n)
+        micro = {}
+        micro.update(bench_ptt(spec))
+        micro.update(bench_core(spec, fast_query=True))
+        micro.update(bench_core(spec, fast_query=False))
+        micro.update(bench_interference(spec))
+        for k, v in sorted(micro.items()):
+            emit(f"perf.{n}w.{k}", v)
+        e2e = bench_end_to_end(spec, n_dags, n_tasks)
+        ok = ok and e2e["trace_equal"]
+        emit(f"perf.{n}w.end_to_end", e2e["fast_s"] * 1e6,
+             f"slow={e2e['slow_s']}s;speedup={e2e['speedup']}x;"
+             f"trace_equal={e2e['trace_equal']}")
+        report["sizes"][str(n)] = {
+            "n_workers": n,
+            "micro_us": {k: round(v, 3) for k, v in micro.items()},
+            "end_to_end": e2e,
+        }
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}", flush=True)
+    if not ok:
+        print("# FAIL: fast/slow paths produced different traces",
+              file=sys.stderr, flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -55,6 +55,26 @@ class ClusterSpec:
     def __post_init__(self) -> None:
         if not self.classes:
             raise ValueError("ClusterSpec needs at least one worker")
+        # Precomputed topology queries.  These sit on the scheduling hot path
+        # (PTT.record/width_index per TAO completion, big_workers/
+        # little_workers per placement), so they must not rebuild tuples per
+        # call; returning the *same* tuple object every time also lets the
+        # PTT detect class groups by identity in O(1).  The spec is frozen,
+        # so the caches can never go stale (object.__setattr__ bypasses the
+        # frozen guard; the extra attrs are not dataclass fields, so eq/hash
+        # semantics are unchanged).
+        n = len(self.classes)
+        widths = valid_widths(n)
+        object.__setattr__(self, "_widths", widths)
+        object.__setattr__(self, "_width_index",
+                           {w: i for i, w in enumerate(widths)})
+        object.__setattr__(self, "_workers_by_cls", {
+            cls: tuple(i for i, c in enumerate(self.classes) if c == cls)
+            for cls in dict.fromkeys(self.classes)
+        })
+        object.__setattr__(self, "_eligible", {
+            w: tuple(range(0, n - w + 1, w)) for w in widths
+        })
 
     # -- basic queries ----------------------------------------------------
     @property
@@ -63,14 +83,14 @@ class ClusterSpec:
 
     @property
     def widths(self) -> tuple[int, ...]:
-        return valid_widths(self.n_workers)
+        return self._widths
 
     @property
     def max_width(self) -> int:
-        return self.widths[-1]
+        return self._widths[-1]
 
     def workers_of(self, cls: str) -> tuple[int, ...]:
-        return tuple(i for i, c in enumerate(self.classes) if c == cls)
+        return self._workers_by_cls.get(cls, ())
 
     @property
     def big_workers(self) -> tuple[int, ...]:
@@ -85,17 +105,18 @@ class ClusterSpec:
 
     def width_index(self, width: int) -> int:
         try:
-            return self.widths.index(width)
-        except ValueError:
+            return self._width_index[width]
+        except KeyError:
             raise ValueError(
                 f"width {width} not a valid width for {self.n_workers} workers"
             ) from None
 
     def eligible_leaders(self, width: int) -> tuple[int, ...]:
         """Workers that can lead a place of ``width`` (aligned, in-range)."""
-        return tuple(
-            w for w in range(0, self.n_workers - width + 1, width)
-        )
+        elig = self._eligible.get(width)
+        if elig is None:  # non-power-of-two widths: compute on demand
+            elig = tuple(range(0, self.n_workers - width + 1, width))
+        return elig
 
     def clusters(self) -> tuple[tuple[str, tuple[int, ...]], ...]:
         """Contiguous (class, workers) runs."""

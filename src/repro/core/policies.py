@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import threading
 from typing import Protocol
 
 from .dag import TAO
@@ -138,6 +139,12 @@ class WeightBasedPolicy(Policy):
 
     def __init__(self) -> None:
         self.threshold = self.INITIAL_THRESHOLD
+        # Policies run OUTSIDE the SchedulerCore lock (see admit), so the
+        # threshold EWMA read-modify-write needs its own tiny lock on the
+        # threaded runtime — otherwise concurrent wake-ups silently drop
+        # blends.  Never held while ctx locks are taken, so no ordering
+        # hazard with the core lock.
+        self._tlock = threading.Lock()
 
     def reset(self) -> None:
         self.threshold = self.INITIAL_THRESHOLD
@@ -183,12 +190,15 @@ class WeightBasedPolicy(Policy):
         if t_little == 0.0:
             return Placement(target=ctx.rng.choice(littles), width=width)
         weight = t_little / t_big
-        threshold = self._threshold(tao)
+        # adaptive threshold: EWMA 1:6 toward the mean weight of the system.
+        # Read and blend atomically (the decision below uses the pre-update
+        # threshold, as before; _goes_big stays outside the lock because it
+        # may take the SchedulerCore lock via running_max_criticality).
+        with self._tlock:
+            threshold = self._threshold(tao)
+            self._store_threshold(tao, (weight + self.OLD_WEIGHT * threshold)
+                                  / (self.OLD_WEIGHT + 1))
         goes_big = self._goes_big(tao, ctx, weight, threshold)
-        # adaptive threshold: EWMA 1:6 toward the mean weight of the system
-        self._store_threshold(tao, (weight + self.OLD_WEIGHT * threshold) / (
-            self.OLD_WEIGHT + 1
-        ))
         pool = bigs if goes_big else littles
         return Placement(target=ctx.rng.choice(pool), width=width)
 

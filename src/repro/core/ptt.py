@@ -15,11 +15,41 @@ The PTT doubles as an online model of the system: because recorded times
 include interference, DVFS and background load, policies built on it adapt to
 *temporal* heterogeneity too (paper §3.1, last paragraph).  The fleet runtime
 additionally uses it as a straggler detector (see ``repro.runtime_ft``).
+
+Constant-time queries (``fast_query``, default on)
+--------------------------------------------------
+The paper's pitch is that placement decisions are cheap table lookups, yet the
+obvious implementations of ``best_leader`` and ``cluster_time`` are
+O(n_workers) scans with per-element numpy scalar reads — the dominant cost of
+weight-based placement at fleet scale.  With ``fast_query=True`` the table
+maintains three incremental structures, updated on ``record()``:
+
+* **per-(class, width) aggregates** — sum and count of tried cells, so
+  ``cluster_time`` over a whole worker class is a ratio read.  The sums are
+  kept as *exact integers*: every finite double is an integer multiple of
+  2^-1074, so cells are accumulated at that fixed scale and the mean is
+  rounded to float only at query time.  Exact integer arithmetic is
+  order-independent, which is what makes the incremental aggregate equal a
+  from-scratch recompute bit for bit — and therefore the fast and slow query
+  paths schedule *identically* (a hard requirement of the perf test suite).
+* **an untried-cell cursor per width** — zero-init exploration returns the
+  first untried eligible leader; cells never become untried again, so a
+  monotone cursor over the (ordered) eligible leaders finds it in amortized
+  O(1) instead of rescanning the tried prefix on every wake-up.
+* **a lazy best-leader cache per width** — ``(time, candidate-rank)`` of the
+  current minimum.  A record that beats the cache replaces it in O(1); a
+  record that *worsens* the cached best merely invalidates it, and the next
+  query recomputes by scanning only that width's eligible leaders.  Ties are
+  broken by candidate rank, matching the scan path's first-wins strict ``<``.
+
+``PTT(..., fast_query=False)`` keeps the pure scan paths as the A/B baseline,
+mirroring the simulator's ``fast_dispatch`` knob.
 """
 from __future__ import annotations
 
 import math
 import threading
+from fractions import Fraction
 from typing import Iterable
 
 import numpy as np
@@ -28,17 +58,58 @@ from .places import ClusterSpec, leader_of
 
 EWMA_OLD_WEIGHT = 4  # paper: saved = (4*old + new) / 5
 
+# 0.0 is the "untried" sentinel, so a genuinely-zero elapsed time (possible
+# with coarse clocks) must not leave a recorded cell looking untried while
+# samples() > 0 — clamp to a tiny epsilon instead.
+MIN_ELAPSED = 1e-12
+
+# Every finite double is an integer multiple of 2**-1074 (the smallest
+# subnormal), so sums of doubles are exact at this fixed scale.
+_SCALE_BITS = 1074
+
+
+def _to_scaled(t: float) -> int:
+    """Exact integer representation of ``t`` at scale 2**-1074."""
+    m, e = math.frexp(t)             # t == m * 2**e, m in [0.5, 1)
+    mi = int(m * (1 << 53))          # exact: doubles carry <= 53 mantissa bits
+    shift = e - 53 + _SCALE_BITS
+    return mi << shift if shift >= 0 else mi >> -shift
+
+
+def _mean_from_scaled(ssum: int, count: int) -> float:
+    """Correctly-rounded float mean of ``count`` scaled-integer doubles."""
+    if count == 0:
+        return 0.0
+    return float(Fraction(ssum, count << _SCALE_BITS))
+
 
 class PTT:
     """Trace table for one TAO type."""
 
-    def __init__(self, spec: ClusterSpec):
+    def __init__(self, spec: ClusterSpec, fast_query: bool = True):
         self.spec = spec
+        self.fast_query = fast_query
         self._t = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.float64)
         # Number of recorded samples per cell; used only for introspection /
         # straggler statistics, not by the paper's policies.
         self._n = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.int64)
         self._lock = threading.Lock()
+        widths = spec.widths
+        # eligible leaders per width index, in candidate (scan) order
+        self._eligible = [spec.eligible_leaders(w) for w in widths]
+        if fast_query:
+            # (class-group tuple, class) pairs for O(1) identity detection in
+            # cluster_time: ClusterSpec caches workers_of(), so policies pass
+            # the very same tuple object on every call.
+            self._groups = tuple(
+                (spec.workers_of(c), c) for c in dict.fromkeys(spec.classes))
+            nw = len(widths)
+            self._cls_sum = {c: [0] * nw for c in dict.fromkeys(spec.classes)}
+            self._cls_cnt = {c: [0] * nw for c in dict.fromkeys(spec.classes)}
+            self._cursor = [0] * nw            # first possibly-untried rank
+            # per width: (time, rank, worker) of the fastest tried leader, or
+            # None when unknown/invalidated (lazily recomputed on query)
+            self._best: list[tuple[float, int, int] | None] = [None] * nw
 
     # -- recording ---------------------------------------------------------
     def record(self, worker: int, width: int, elapsed: float) -> None:
@@ -49,16 +120,44 @@ class PTT:
         """
         if elapsed < 0 or not math.isfinite(elapsed):
             raise ValueError(f"bad elapsed time {elapsed!r}")
+        elapsed = max(elapsed, MIN_ELAPSED)  # keep the 0.0 untried sentinel
         wi = self.spec.width_index(width)
         with self._lock:
-            old = self._t[worker, wi]
+            old = float(self._t[worker, wi])
             if old == 0.0:
-                self._t[worker, wi] = elapsed
+                new = elapsed
             else:
-                self._t[worker, wi] = (EWMA_OLD_WEIGHT * old + elapsed) / (
+                new = (EWMA_OLD_WEIGHT * old + elapsed) / (
                     EWMA_OLD_WEIGHT + 1
                 )
+            self._t[worker, wi] = new
             self._n[worker, wi] += 1
+            if self.fast_query:
+                self._update_aggregates(worker, wi, width, old, new)
+
+    def _update_aggregates(self, worker: int, wi: int, width: int,
+                           old: float, new: float) -> None:
+        """O(1) incremental maintenance; caller holds the lock."""
+        cls = self.spec.class_of(worker)
+        self._cls_sum[cls][wi] += _to_scaled(new) - (
+            _to_scaled(old) if old != 0.0 else 0)
+        if old == 0.0:
+            self._cls_cnt[cls][wi] += 1
+        # best-leader cache: only eligible-leader rows participate
+        if worker % width or worker + width > self.spec.n_workers:
+            return
+        rank = worker // width
+        best = self._best[wi]
+        if best is None:
+            return                     # already dirty; recomputed on query
+        t_b, r_b, w_b = best
+        if worker == w_b:
+            if new <= t_b:
+                self._best[wi] = (new, r_b, w_b)   # improved: still the best
+            else:
+                self._best[wi] = None              # worsened: lazy recompute
+        elif (new, rank) < (t_b, r_b):
+            self._best[wi] = (new, rank, worker)
 
     # -- queries -----------------------------------------------------------
     def time(self, worker: int, width: int) -> float:
@@ -79,8 +178,10 @@ class PTT:
         ``(None, inf)`` when there are no candidates.
         """
         wi = self.spec.width_index(width)
+        if self.fast_query and candidates is None:
+            return self._best_leader_fast(wi)
         if candidates is None:
-            candidates = self.spec.eligible_leaders(width)
+            candidates = self._eligible[wi]
         best: tuple[int | None, float] = (None, math.inf)
         for c in candidates:
             if leader_of(c, width) != c:
@@ -92,18 +193,50 @@ class PTT:
                 best = (c, t)
         return best
 
+    def _best_leader_fast(self, wi: int):
+        """Amortized-O(1) best_leader: untried cursor, then the lazy cache."""
+        elig = self._eligible[wi]
+        if not elig:
+            return (None, math.inf)
+        with self._lock:
+            cur = self._cursor[wi]
+            t_col = self._t[:, wi]
+            while cur < len(elig) and t_col[elig[cur]] != 0.0:
+                cur += 1               # cells never revert to untried:
+            self._cursor[wi] = cur     # the cursor only ever advances
+            if cur < len(elig):
+                return (elig[cur], 0.0)
+            best = self._best[wi]
+            if best is None:           # invalidated: rescan this width only
+                best = min((float(t_col[c]), r, c)
+                           for r, c in enumerate(elig))
+                self._best[wi] = best
+            return (best[2], best[0])
+
     def cluster_time(self, workers: Iterable[int], width: int) -> float:
         """Mean recorded time over a set of workers at ``width`` (0 if none).
 
         Used by weight-based scheduling to estimate the per-class execution
-        time of a TAO type.
+        time of a TAO type.  When ``workers`` is one of the spec's class
+        groups (the only callers on the hot path) and ``fast_query`` is on,
+        this is an O(1) ratio read of the incremental aggregates; arbitrary
+        worker subsets fall back to the scan, which computes the identical
+        exact-integer mean.
         """
         wi = self.spec.width_index(width)
-        ts = [float(self._t[w, wi]) for w in workers]
-        ts = [t for t in ts if t > 0.0]
-        if not ts:
-            return 0.0
-        return float(np.mean(ts))
+        if self.fast_query:
+            for group, cls in self._groups:
+                if workers is group:
+                    with self._lock:
+                        return _mean_from_scaled(self._cls_sum[cls][wi],
+                                                 self._cls_cnt[cls][wi])
+        ssum, cnt = 0, 0
+        for w in workers:
+            t = float(self._t[w, wi])
+            if t > 0.0:
+                ssum += _to_scaled(t)
+                cnt += 1
+        return _mean_from_scaled(ssum, cnt)
 
     def best_width(self, leader: int, widths: Iterable[int] | None = None):
         """History-based molding query (paper §3.3).
@@ -111,7 +244,8 @@ class PTT:
         Looks *within the leader's row* for the width with the best
         resource-efficiency, i.e. minimising ``time(width) * width``.  Untried
         widths are returned first (exploration).  Returns ``(width, cost)``
-        with cost = time*width (0.0 when exploring).
+        with cost = time*width (0.0 when exploring).  The row has only
+        O(log n_workers) cells, so this stays a (short) scan.
         """
         if widths is None:
             widths = self.spec.widths
@@ -134,8 +268,9 @@ class PTT:
 class PTTRegistry:
     """``{tao_type: PTT}`` — one table per TAO class, lazily created."""
 
-    def __init__(self, spec: ClusterSpec):
+    def __init__(self, spec: ClusterSpec, fast_query: bool = True):
         self.spec = spec
+        self.fast_query = fast_query
         self._tables: dict[str, PTT] = {}
         self._lock = threading.Lock()
 
@@ -143,7 +278,8 @@ class PTTRegistry:
         tbl = self._tables.get(tao_type)
         if tbl is None:
             with self._lock:
-                tbl = self._tables.setdefault(tao_type, PTT(self.spec))
+                tbl = self._tables.setdefault(
+                    tao_type, PTT(self.spec, fast_query=self.fast_query))
         return tbl
 
     def __contains__(self, tao_type: str) -> bool:

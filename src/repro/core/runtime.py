@@ -71,16 +71,24 @@ class ThreadedRuntime:
     """Executes a TAO-DAG on ``spec.n_workers`` threads under ``policy``."""
 
     def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0,
-                 steal_backoff_s: float = 1e-5):
+                 park_timeout_s: float = 0.05):
         self.spec = spec
         self.core = SchedulerCore(spec, policy, seed=seed)
-        self.steal_backoff_s = steal_backoff_s
+        # Guard timeout for parked workers.  Idle workers no longer
+        # sleep-poll: they park on a Condition signalled whenever work is
+        # enqueued/distributed (so wake-up latency is a notify, not a poll
+        # period) and this timeout is only the belt-and-braces recheck
+        # interval — parked workers burn ~20 wake-ups/s, not ~100k.
+        self.park_timeout_s = park_timeout_s
         self._rngs = [random.Random(seed * 7919 + i) for i in range(spec.n_workers)]
         n = spec.n_workers
         self._ready: list[deque] = [deque() for _ in range(n)]
         self._assembly: list[deque] = [deque() for _ in range(n)]
         self._qlocks = [threading.Lock() for _ in range(n)]
         self._alocks = [threading.Lock() for _ in range(n)]
+        self._work_cv = threading.Condition()
+        self._work_epoch = 0        # bumped under _work_cv on every signal
+        self._n_parked = 0
         self._done = threading.Event()
         self._total = 0
         self._error: BaseException | None = None
@@ -122,10 +130,28 @@ class ThreadedRuntime:
             q.clear()
         self._t0 = time.perf_counter()
 
+    def _signal_work(self) -> None:
+        """New work (or shutdown) exists: wake parked workers.
+
+        The epoch counter pairs with the read at the top of the worker loop
+        to close the classic missed-wakeup race: a worker only parks if the
+        epoch is unchanged since *before* it scanned the queues, so work
+        published after its scan always either bumps the epoch first (the
+        park is skipped) or is found by the scan."""
+        with self._work_cv:
+            self._work_epoch += 1
+            if self._n_parked:
+                self._work_cv.notify_all()
+
+    def _set_done(self) -> None:
+        self._done.set()
+        self._signal_work()
+
     def _enqueue_ready(self, tao: TAO, waker: int) -> None:
         placement = self.core.admit(tao, waker)
         with self._qlocks[placement.target]:
             self._ready[placement.target].append(tao)
+        self._signal_work()
 
     def _dpa_distribute(self, tao: TAO, popper: int) -> None:
         """Dynamic Place Allocation: push into members' assembly queues."""
@@ -146,6 +172,7 @@ class ThreadedRuntime:
         for m in ex.members:
             with self._alocks[m]:
                 self._assembly[m].append(ex)
+        self._signal_work()
 
     # ------------------------------------------------------------- worker loop
     def _execute_chunks(self, ex: _TaoExec, worker: int) -> None:
@@ -174,7 +201,7 @@ class ThreadedRuntime:
             if self._wl_stats is not None:
                 self._record_completion(ex, end_rel)
             if self.core.completed >= self._total:
-                self._done.set()
+                self._set_done()
 
     def _record_completion(self, ex: _TaoExec, end_rel: float) -> None:
         """Workload-mode accounting: per-DAG table + trace record."""
@@ -211,20 +238,35 @@ class ThreadedRuntime:
         n = self.spec.n_workers
         try:
             while not self._done.is_set():
+                # epoch read precedes the queue scans (see _signal_work)
+                epoch = self._work_epoch
                 # 1) assembly work (TAOs already placed on me)
                 if self._try_assembly(worker):
                     continue
                 # 2) my own ready deque (locality)
                 if self._try_ready(worker, worker):
                     continue
-                # 3) one random steal attempt, interleaved with local checks
-                victim = rng.randrange(n)
-                if victim != worker and self._try_ready(worker, victim):
-                    continue
-                time.sleep(self.steal_backoff_s)
+                # 3) one random steal attempt, interleaved with the local
+                #    checks (paper §5) — drawn from the OTHER n-1 workers,
+                #    since stealing from oneself wastes the attempt
+                if n > 1:
+                    victim = rng.randrange(n - 1)
+                    if victim >= worker:
+                        victim += 1
+                    if self._try_ready(worker, victim):
+                        continue
+                # 4) nothing anywhere: park until new work is signalled.
+                #    On wake-up the loop re-runs the local checks before the
+                #    next steal, preserving the paper's one-steal-per-scan
+                #    discipline while parked workers burn ~0 CPU.
+                with self._work_cv:
+                    if self._work_epoch == epoch and not self._done.is_set():
+                        self._n_parked += 1
+                        self._work_cv.wait(timeout=self.park_timeout_s)
+                        self._n_parked -= 1
         except BaseException as e:  # surface worker crashes to run()
             self._error = e
-            self._done.set()
+            self._set_done()
 
     # ------------------------------------------------------------------ run
     def _run_workers(self, timeout_s: float) -> float:
@@ -240,7 +282,7 @@ class ThreadedRuntime:
             t.start()
         finished = self._done.wait(timeout=timeout_s)
         elapsed = time.perf_counter() - self._t0
-        self._done.set()
+        self._set_done()
         for t in threads:
             t.join(timeout=5.0)
         if self._error is not None:
@@ -279,7 +321,7 @@ class ThreadedRuntime:
                     self._enqueue_ready(r, waker=0)
         except BaseException as e:  # surface admission crashes to run_workload
             self._error = e
-            self._done.set()
+            self._set_done()
 
     def run_workload(self, workload, timeout_s: float = 600.0):
         """Execute a multi-DAG arrival stream on the live worker pool.
@@ -309,7 +351,7 @@ class ThreadedRuntime:
             try:
                 elapsed = self._run_workers(timeout_s)
             finally:
-                self._done.set()
+                self._set_done()
                 admitter.join(timeout=5.0)
         else:
             elapsed = 0.0

@@ -71,10 +71,13 @@ class SchedulerCore:
     Implements the ``SchedulerContext`` protocol consumed by policies.
     """
 
-    def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0):
+    def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0,
+                 fast_query: bool = True):
         self.spec = spec
         self.policy = policy
-        self.ptt = PTTRegistry(spec)
+        # fast_query=False keeps the PTT's O(n_workers) scan queries — only
+        # useful as the baseline in perf/parity tests (mirrors fast_dispatch)
+        self.ptt = PTTRegistry(spec, fast_query=fast_query)
         self.rng = random.Random(seed)
         # one criticality multiset per DAG namespace: concurrent tenants must
         # not drown each other's critical paths (a small DAG's root is still
@@ -86,6 +89,10 @@ class SchedulerCore:
         self._lock = threading.RLock()
 
     # -- SchedulerContext ----------------------------------------------------
+    # The context getters take the (reentrant) lock individually: policies
+    # now run *outside* the global critical section (see admit), so each read
+    # must be internally consistent — in particular _CritMultiset.max()
+    # lazily mutates its heap and would corrupt under unlocked concurrency.
     def system_load(self, namespace: int | None = None) -> int:
         """Ready+running TAOs — globally, or for one DAG namespace.
 
@@ -93,28 +100,43 @@ class SchedulerCore:
         (``namespace=tao.dag_id``) so a small DAG arriving during another
         tenant's burst still sees idle headroom; the global counter stays
         the legacy signal for single-DAG runs."""
-        if namespace is None:
-            return self._in_flight
-        return self._in_flight_ns.get(namespace, 0)
+        with self._lock:
+            if namespace is None:
+                return self._in_flight
+            return self._in_flight_ns.get(namespace, 0)
 
     def active_namespaces(self) -> int:
         """Number of DAG namespaces with at least one ready/running TAO."""
-        return len(self._in_flight_ns)
+        with self._lock:
+            return len(self._in_flight_ns)
 
     def running_max_criticality(self, namespace: int = 0) -> int:
-        ms = self._crit.get(namespace)
-        return ms.max() if ms is not None else 0
+        with self._lock:
+            ms = self._crit.get(namespace)
+            return ms.max() if ms is not None else 0
 
     # -- lifecycle transitions -------------------------------------------------
     def admit(self, tao: TAO, waker: int) -> Placement:
         """A TAO became ready: run the policy, clamp the width, account it.
 
         Returns the placement; the execution vehicle enqueues accordingly.
+
+        The policy's placement computation runs OUTSIDE the global lock, so
+        on the threaded runtime concurrent wake-ups no longer serialize on
+        each other's PTT reads.  A placement may therefore observe aggregates
+        that are a few records stale relative to the accounting below — which
+        is safe because the PTT is *already* an EWMA approximation of a
+        drifting system (interference, DVFS, background load, paper §3.1):
+        a decision computed from a snapshot a few records old is exactly as
+        (in)accurate as one computed a microsecond later, and every
+        individual read (PTT aggregate, load counter, criticality max) is
+        internally consistent under its own lock.  The accounting transition
+        itself stays atomic.
         """
+        placement = self.policy.place(tao, self, waker)
+        width = self._clamp_width(placement.width)
+        target = placement.target % self.spec.n_workers
         with self._lock:
-            placement = self.policy.place(tao, self, waker)
-            width = self._clamp_width(placement.width)
-            target = placement.target % self.spec.n_workers
             tao.assigned_width = width
             # assigned_leader stays -1 here: the real place is derived from
             # the *popper* at DPA time (a steal moves it), so the vehicles

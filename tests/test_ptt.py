@@ -88,6 +88,26 @@ def test_rejects_bad_elapsed():
         t.record(0, 1, -1.0)
 
 
+def test_zero_elapsed_does_not_leave_cell_untried():
+    """Regression: 0.0 is the untried sentinel, so a genuinely-zero elapsed
+    (coarse clock) is clamped to a tiny epsilon instead of leaving a cell
+    with samples() > 0 that still claims untried()."""
+    t = PTT(hikey960())
+    t.record(0, 1, 0.0)
+    assert t.samples(0, 1) == 1
+    assert not t.untried(0, 1)
+    assert 0.0 < t.time(0, 1) <= 1e-9
+    # the zero-record also participates in zero-init exploration bookkeeping
+    leader, tm = t.best_leader(1)
+    assert tm == 0.0 and leader != 0
+    # invariant after any record sequence: untried <=> no samples
+    t.record(3, 2, 0.0)
+    t.record(3, 2, 5.0)
+    for w in range(8):
+        for width in (1, 2, 4, 8):
+            assert t.untried(w, width) == (t.samples(w, width) == 0)
+
+
 def test_registry_one_table_per_type():
     reg = PTTRegistry(hikey960())
     a = reg.table("matmul")
