@@ -195,7 +195,10 @@ def main() -> int:
     quick = "--quick" in args
     out_path = "BENCH_sched.json"
     if "--out" in args:
-        out_path = args[args.index("--out") + 1]
+        i = args.index("--out") + 1
+        if i >= len(args) or args[i].startswith("--"):
+            sys.exit("--out needs a file path (e.g. --out BENCH_sched.json)")
+        out_path = args[i]
     sizes = QUICK_SIZES if quick else FULL_SIZES
     # stream sized so the slow baseline stays seconds, not minutes
     n_dags, n_tasks = (6, 60) if quick else (8, 150)

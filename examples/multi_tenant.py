@@ -11,12 +11,17 @@ Criticality is namespaced per DAG, so a 5-node tenant's root still counts
 as critical while a 3000-node tenant holds criticality values in the
 hundreds.
 
+The admission demo at the end shows the other half of multi-tenancy:
+an SLO-aware gate (``repro.core.admission``) throttling a bursty batch
+tenant so a small latency-bound tenant's p99 stays flat.
+
 Run:  PYTHONPATH=src python examples/multi_tenant.py
 """
 import math
 
-from repro.core import (Simulator, ThreadedRuntime, Workload, fleet, hikey960,
-                        make_policy, random_dag, random_workload)
+from repro.core import (Simulator, ThreadedRuntime, Workload, bursty_workload,
+                        fleet, hikey960, make_gate, make_policy, percentile,
+                        random_dag, random_workload)
 
 
 def _fmt(v: float, scale: float = 1.0, unit: str = "s") -> str:
@@ -83,10 +88,44 @@ def poisson_stream_demo() -> None:
               f"{res.sojourn_p99():8.4f} {res.mean_sojourn():8.4f}")
 
 
+def admission_control_demo() -> None:
+    """SLO-aware backpressure: tenant ``burst`` dumps 14 large DAGs half a
+    second into tenant ``steady``'s gentle stream.  Ungated, the burst
+    inflates the steady tenant's p99 several-fold; the ``slo-adaptive``
+    gate sees the burst's backlog dominate the pool and holds its DAGs at
+    the door (releasing them as load drains), keeping the steady tenant's
+    latency flat without shrinking total goodput."""
+    print("\n== admission control: bursty batch tenant vs 0.5s-SLO tenant ==")
+    slo = {"steady": 0.5, "burst": 3.0}
+
+    def run(gate):
+        sim = Simulator(fleet(48, 16), make_policy("molding:adaptive"),
+                        seed=1)
+        return sim.run_workload(bursty_workload(seed=1), admission=gate)
+
+    for name in ("none", "slo-adaptive"):
+        gate = make_gate(name) if name == "none" else make_gate(
+            name, slo=slo["steady"], slo_per_tenant={"burst": slo["burst"]})
+        res = run(gate)
+        print(f"\n  admission={name}  (goodput={res.goodput(slo)} of "
+              f"{len(res.per_dag)} DAGs within SLO, "
+              f"makespan={res.makespan:.3f}s)")
+        for tenant, stats in res.per_tenant().items():
+            so = [s.sojourn for s in stats if s.done]
+            delayed = [s for s in stats
+                       if s.was_admitted and s.admission_delay > 1e-9]
+            rejected = sum(1 for s in stats if s.rejected)
+            print(f"    {tenant:7s} SLO={slo[tenant]:.1f}s "
+                  f"p50={_fmt(percentile(so, 50))} "
+                  f"p99={_fmt(percentile(so, 99))} "
+                  f"delayed={len(delayed)} rejected={rejected}")
+
+
 def main() -> None:
     trace_driven_demo()
     poisson_stream_demo()
     threaded_vehicle_demo()
+    admission_control_demo()
 
 
 if __name__ == "__main__":

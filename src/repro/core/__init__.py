@@ -1,8 +1,12 @@
 """repro.core — the paper's contribution: heterogeneous mixed-mode DAG
 scheduling with a Performance Trace Table, criticality / weight-based
 placement and task molding (Rohlin, Fahlgren, Pericàs — HIP3ES 2019)."""
+from .admission import (ALL_GATE_NAMES, AdmissionDecision, AdmissionGate,
+                        AdmissionRequest, LoadSignals, NoAdmission,
+                        SloAdaptiveGate, TokenBucketGate, make_gate)
 from .dag import TAO, TaoDag, chain
-from .dag_gen import KERNEL_TYPES, paper_dags, random_dag, random_workload
+from .dag_gen import (KERNEL_TYPES, bursty_workload, paper_dags, random_dag,
+                      random_workload)
 from .places import (BIG, LITTLE, ClusterSpec, fleet, hikey960, homogeneous,
                      leader_of, place_members, valid_widths)
 from .policies import (ALL_POLICY_NAMES, AdaptivePolicy,
@@ -19,7 +23,10 @@ from .workload import (DagArrival, DagStats, Workload, WorkloadResult,
 
 __all__ = [
     "TAO", "TaoDag", "chain", "KERNEL_TYPES", "paper_dags", "random_dag",
-    "random_workload",
+    "random_workload", "bursty_workload",
+    "ALL_GATE_NAMES", "AdmissionDecision", "AdmissionGate",
+    "AdmissionRequest", "LoadSignals", "NoAdmission", "SloAdaptiveGate",
+    "TokenBucketGate", "make_gate",
     "BIG", "LITTLE", "ClusterSpec", "fleet", "hikey960", "homogeneous",
     "leader_of", "place_members", "valid_widths",
     "ALL_POLICY_NAMES", "AdaptivePolicy", "CriticalityAwarePolicy",

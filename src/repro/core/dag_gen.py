@@ -134,3 +134,45 @@ def random_workload(
         wl.add(dag, at=t, name=f"dag{i}(deg={degree})")
         t += rng.expovariate(rate)
     return wl
+
+
+def bursty_workload(
+    n_steady: int = 10,
+    steady_rate: float = 2.0,
+    steady_tasks: int = 60,
+    n_burst: int = 14,
+    burst_at: float = 0.5,
+    burst_rate: float = 100.0,
+    burst_tasks: int = 150,
+    degrees: Sequence[float] = (1.62, 3.03, 8.06),
+    seed: int = 0,
+    width_hint: int = 1,
+):
+    """Two-tenant admission-control stress stream.
+
+    Tenant ``steady`` submits ``n_steady`` small DAGs as a gentle Poisson
+    process (``steady_rate`` DAGs/s from t=0) — the latency-sensitive
+    customer whose sojourn an SLO protects.  Tenant ``burst`` dumps
+    ``n_burst`` larger DAGs in a tight window starting at ``burst_at``
+    (inter-arrivals ~ Exp(``burst_rate``), i.e. effectively all at once) —
+    the batch customer whose spike would otherwise blow the steady
+    tenant's p99.  Admission gates key on ``DagArrival.tenant``, so this
+    is the canonical input for demonstrating per-tenant backpressure.
+    """
+    from .workload import Workload
+
+    rng = random.Random(seed)
+    wl = Workload()
+    t = 0.0
+    for i in range(1, n_steady + 1):
+        dag = random_dag(steady_tasks, target_degree=rng.choice(list(degrees)),
+                         seed=rng.randrange(2 ** 31), width_hint=width_hint)
+        wl.add(dag, at=t, name=f"steady{i}", tenant="steady")
+        t += rng.expovariate(steady_rate)
+    t = burst_at
+    for i in range(1, n_burst + 1):
+        dag = random_dag(burst_tasks, target_degree=rng.choice(list(degrees)),
+                         seed=rng.randrange(2 ** 31), width_hint=width_hint)
+        wl.add(dag, at=t, name=f"burst{i}", tenant="burst")
+        t += rng.expovariate(burst_rate)
+    return wl

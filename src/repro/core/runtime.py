@@ -24,10 +24,36 @@ discrete-event simulator implements, returning the same ``WorkloadResult``.
 On a TPU fleet each worker would own a device group and chunks would be
 ``pjit`` calls on its slice; the orchestrators in ``serve_orchestrator`` /
 ``train_orchestrator`` build such TAOs.
+
+Admission control: ``run_workload(..., admission=gate)`` makes the admitter
+thread consult the same :class:`~repro.core.admission.AdmissionGate`
+protocol as the simulator before releasing a DAG's roots — DELAY verdicts
+re-queue the arrival at the gate's ``retry_at``, REJECT verdicts mark the
+DAG and *shrink the completion target* (``_discount_total``), since its
+TAOs will never execute.
+
+Thread-safety contract: state is partitioned by lock — per-worker ready
+deques (``_qlocks``) and assembly queues (``_alocks``), the stats/trace
+table (``_stats_lock``), the completion target (``_total_lock``), and the
+park/wake machinery (``_work_cv`` guarding ``_work_epoch``/``_n_parked``).
+``SchedulerCore``/PTT/gate objects carry their own locks.  Worker threads,
+the admitter thread and the caller only communicate through these guarded
+structures plus the ``_done`` event; ``_error`` is published before
+``_set_done`` so the join in ``_run_workers`` observes it.  The gate's
+``decide`` runs only on the admitter thread; ``on_dag_done`` is called
+from worker threads (outside ``_stats_lock``) and gates lock internally.
+
+Fast/slow-path invariant: idle workers park on a Condition signalled on
+every enqueue/distribute (epoch counter closes the missed-wakeup race) —
+parking changes *when* a worker rescans, never what it may legally pop, so
+schedules remain valid interleavings of the same DPA state machine the
+simulator executes deterministically.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import random
 import threading
 import time
@@ -97,6 +123,8 @@ class ThreadedRuntime:
         self._trace: list[TraceRecord] = []    # workload-mode trace
         self._wl_stats: dict | None = None     # dag_id -> DagStats
         self._stats_lock = threading.Lock()
+        self._total_lock = threading.Lock()    # rejection-time target shrink
+        self._gate = None                      # workload-mode admission gate
         self._threads: list[threading.Thread] = []
 
     # ------------------------------------------------------------------ admin
@@ -119,6 +147,7 @@ class ThreadedRuntime:
         self._threads = []
         self.core.reset_counters()
         self._total = total
+        self._gate = None
         self._done.clear()
         self._error = None
         self._trace = []
@@ -206,6 +235,7 @@ class ThreadedRuntime:
     def _record_completion(self, ex: _TaoExec, end_rel: float) -> None:
         """Workload-mode accounting: per-DAG table + trace record."""
         tao = ex.tao
+        dag_done = None
         with self._stats_lock:
             self._trace.append(TraceRecord(
                 tao.id, tao.type, ex.leader, ex.width,
@@ -214,6 +244,23 @@ class ThreadedRuntime:
             st = self._wl_stats.get(tao.dag_id)
             if st is not None:
                 st.record_completion(end_rel)
+                if st.done:
+                    dag_done = st
+        # gate feedback outside _stats_lock (gates lock internally; the
+        # admitter thread's decide() must not wait on stats accounting)
+        if dag_done is not None and self._gate is not None:
+            self._gate.on_dag_done(dag_done.tenant, dag_done.sojourn, end_rel,
+                                   n_taos=dag_done.n_taos)
+
+    def _discount_total(self, n_taos: int) -> None:
+        """A rejected DAG's TAOs will never execute: shrink the completion
+        target, and finish the run if the remaining work is already done
+        (workers re-check after each commit, the admitter after each
+        rejection — between them the done transition cannot be missed)."""
+        with self._total_lock:
+            self._total -= n_taos
+            if self.core.completed >= self._total:
+                self._set_done()
 
     def _try_assembly(self, worker: int) -> bool:
         with self._alocks[worker]:
@@ -307,15 +354,53 @@ class ThreadedRuntime:
         }
 
     # ------------------------------------------------------------- workload
-    def _admit_arrivals(self, arrivals: list) -> None:
-        """Timer thread: release each DAG's roots at its wall-clock offset."""
+    def _admit_arrivals(self, arrivals: list, gate=None) -> None:
+        """Timer thread: release each DAG's roots at its wall-clock offset,
+        consulting the admission gate (if any) first.
+
+        DELAY verdicts re-queue the arrival at the gate's ``retry_at`` in a
+        local (time, seq) heap — the same ordering the simulator's event
+        queue gives gate re-evaluations, so a trace-deterministic gate
+        (token-bucket) decides identically on both vehicles.  REJECT
+        verdicts mark the DAG's stats row and shrink the completion target.
+        """
+        from .admission import DELAY, REJECT, AdmissionRequest
+        pending = [(arr.at, i, arr, None) for i, arr in enumerate(arrivals)]
+        heapq.heapify(pending)
+        seq = itertools.count(len(arrivals))
         try:
-            for arr in arrivals:
-                delay = arr.at - (time.perf_counter() - self._t0)
+            while pending:
+                delay = pending[0][0] - (time.perf_counter() - self._t0)
                 if delay > 0 and self._done.wait(timeout=delay):
                     return          # run ended (error/timeout) mid-stream
                 if self._done.is_set():
                     return
+                _, _, arr, req = heapq.heappop(pending)
+                now = time.perf_counter() - self._t0
+                if gate is not None:
+                    if req is None:
+                        req = AdmissionRequest(
+                            dag_id=arr.dag_id, tenant=arr.tenant,
+                            n_taos=len(arr.dag), arrival=arr.at)
+                    verdict = gate.decide(req, now,
+                                          self.core.admission_signals())
+                    if verdict.action == DELAY:
+                        req.attempts += 1
+                        # strictly-future retry so a zero-quantum gate
+                        # cannot spin this thread
+                        retry = max(verdict.retry_at, now + 1e-4)
+                        heapq.heappush(pending,
+                                       (retry, next(seq), arr, req))
+                        continue
+                    if verdict.action == REJECT:
+                        with self._stats_lock:
+                            self._wl_stats[arr.dag_id].mark_rejected()
+                        gate.on_reject(req, now)
+                        self._discount_total(len(arr.dag))
+                        continue
+                    gate.on_admit(req, now)
+                with self._stats_lock:
+                    self._wl_stats[arr.dag_id].mark_admitted(now)
                 roots = self.core.prepare(arr.dag, dag_id=arr.dag_id)
                 for r in roots:
                     self._enqueue_ready(r, waker=0)
@@ -323,7 +408,8 @@ class ThreadedRuntime:
             self._error = e
             self._set_done()
 
-    def run_workload(self, workload, timeout_s: float = 600.0):
+    def run_workload(self, workload, timeout_s: float = 600.0,
+                     admission=None):
         """Execute a multi-DAG arrival stream on the live worker pool.
 
         The same contract as :meth:`Simulator.run_workload`: DAGs are
@@ -332,21 +418,25 @@ class ThreadedRuntime:
         ``SchedulerCore.prepare(dag, dag_id)``, and the returned
         ``WorkloadResult`` carries the per-DAG latency table (arrival /
         queue delay / makespan / sojourn, all relative to run start) plus
-        the executed trace."""
+        the executed trace.  ``admission`` is an optional
+        :class:`~repro.core.admission.AdmissionGate` consulted by the
+        admitter thread; rejected DAGs appear in the table with
+        ``rejected=True`` and none of their TAOs ever reach a worker."""
         from .workload import DagStats, WorkloadResult
         arrivals = workload.arrivals()
         total = workload.total_taos()
         self._begin_run(total)
+        self._gate = admission
         stats = {
             a.dag_id: DagStats.for_arrival(a.dag_id, a.name, a.at,
-                                           len(a.dag))
+                                           len(a.dag), tenant=a.tenant)
             for a in arrivals
         }
         self._wl_stats = stats
         live = [a for a in arrivals if len(a.dag) > 0]
         if live:
             admitter = threading.Thread(target=self._admit_arrivals,
-                                        args=(live,), daemon=True)
+                                        args=(live, admission), daemon=True)
             admitter.start()
             try:
                 elapsed = self._run_workers(timeout_s)

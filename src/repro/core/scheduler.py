@@ -1,10 +1,27 @@
 """Shared scheduler core: DPA bookkeeping + commit-and-wakeup logic.
 
-Both execution vehicles (the threaded runtime and the discrete-event
+Role: both execution vehicles (the threaded runtime and the discrete-event
 simulator) drive this object.  It owns the pieces the paper's policies need
 to observe — the PTT registry, the running-criticality multiset (the "atomic
-variable" of §3.2.1) and the load counter — and performs the wake-up
+variable" of §3.2.1) and the load counters — and performs the wake-up
 transition: parent completes -> child pending-- -> ready -> policy placement.
+It also exports the load snapshot (:meth:`SchedulerCore.admission_signals`)
+that admission gates consult before a DAG's roots ever reach ``admit``.
+
+Thread-safety contract: one reentrant lock (``_lock``) guards all mutable
+state.  ``admit`` runs the *policy* outside that lock (concurrent wake-ups
+on the threaded runtime must not serialize on each other's PTT reads) and
+only takes it for the accounting transition; every SchedulerContext getter
+takes the lock individually so each read is internally consistent.  A
+policy may therefore observe aggregates a few records stale — safe, because
+the PTT is already an EWMA approximation of a drifting system (see
+``admit``'s docstring).  ``commit_and_wakeup`` and ``reset_counters`` are
+fully serialized under the lock.
+
+Fast/slow-path invariant: ``fast_query=True`` (default) gives the PTT its
+O(1) incremental aggregates; ``fast_query=False`` keeps the O(n_workers)
+scan queries.  Both paths return bit-identical values, so schedules do not
+depend on the knob — it exists purely as the perf-suite baseline.
 """
 from __future__ import annotations
 
@@ -12,6 +29,7 @@ import heapq
 import random
 import threading
 
+from .admission import LoadSignals
 from .dag import TAO, TaoDag
 from .places import ClusterSpec
 from .policies import Placement, Policy
@@ -114,6 +132,16 @@ class SchedulerCore:
         with self._lock:
             ms = self._crit.get(namespace)
             return ms.max() if ms is not None else 0
+
+    def admission_signals(self) -> LoadSignals:
+        """One internally-consistent load snapshot for admission gates
+        (taken under the core lock, so in_flight/active_namespaces/
+        completed all describe the same instant)."""
+        with self._lock:
+            return LoadSignals(in_flight=self._in_flight,
+                               active_namespaces=len(self._in_flight_ns),
+                               n_workers=self.spec.n_workers,
+                               completed=self._completed)
 
     # -- lifecycle transitions -------------------------------------------------
     def admit(self, tao: TAO, waker: int) -> Placement:

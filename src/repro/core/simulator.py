@@ -28,6 +28,26 @@ Work stealing: ready TAOs are pushed to the policy's target worker; idle
 workers first pop locally then steal from a uniformly random non-empty victim
 (paper §5: "uniform random work stealing ... interleaved with one check of
 the local queues").
+
+Admission control: ``run_workload(..., admission=gate)`` routes every DAG
+arrival through an :class:`~repro.core.admission.AdmissionGate` before its
+roots are enqueued — DELAY verdicts become future ARRIVE events at the
+gate's ``retry_at``, REJECT verdicts mark the DAG in the per-DAG table and
+discard it without a single TAO reaching a worker.  The same gate protocol
+drives :meth:`repro.core.runtime.ThreadedRuntime.run_workload`, keeping the
+two vehicles comparable on one gated stream.
+
+Thread-safety contract: the simulator is strictly single-threaded — one
+event loop mutates all state (queues, free times, interference counters,
+DagStats) without locks; only the shared ``SchedulerCore``/PTT objects it
+drives carry locks (they are also driven by the threaded vehicle).  Never
+run one Simulator instance from two threads.
+
+Fast/slow-path invariant: ``fast_dispatch`` (bitmask idle/non-empty sets,
+O(1) interference counters, O(k) water-filling) and the PTT's
+``fast_query`` change *data structures only* — for the same seed the fast
+and slow paths schedule byte-identically, which ``benchmarks/perf.py``
+asserts as full trace equality in CI.
 """
 from __future__ import annotations
 
@@ -280,27 +300,37 @@ class Simulator:
         self.failed.clear()
 
     # -- main entry -----------------------------------------------------------
-    def run(self, dag, max_events: int | None = None) -> SimResult:
+    def run(self, dag, max_events: int | None = None,
+            admission=None) -> SimResult:
         """Execute one DAG (offline, arrival at t=0) or a whole ``Workload``
         stream (online arrivals).  Returns a ``WorkloadResult`` (a
         ``SimResult`` subclass) either way; workload runs carry the per-DAG
         latency table in ``result.per_dag``.
 
         ``max_events`` bounds *all* processed events — TAO completions plus
-        one arrival event per admitted DAG — so budget ``n_taos + n_dags``
-        when sizing it exactly."""
+        one arrival/gate-retry event per DAG — so budget ``n_taos + n_dags``
+        (plus expected gate re-evaluations) when sizing it exactly."""
         from .workload import Workload
         if isinstance(dag, Workload):
-            return self.run_workload(dag, max_events=max_events)
-        return self._execute([(0.0, 0, dag, "")], max_events)
+            return self.run_workload(dag, max_events=max_events,
+                                     admission=admission)
+        return self._execute([(0.0, 0, dag, "", "default")], max_events,
+                             admission)
 
-    def run_workload(self, workload, max_events: int | None = None):
-        """Execute a multi-DAG arrival stream on the shared pool."""
-        arrivals = [(a.at, a.dag_id, a.dag, a.name)
+    def run_workload(self, workload, max_events: int | None = None,
+                     admission=None):
+        """Execute a multi-DAG arrival stream on the shared pool.
+
+        ``admission`` is an optional
+        :class:`~repro.core.admission.AdmissionGate`; ``None`` (default)
+        admits everything immediately, byte-identically to the pre-gate
+        behavior."""
+        arrivals = [(a.at, a.dag_id, a.dag, a.name, a.tenant)
                     for a in workload.arrivals()]
-        return self._execute(arrivals, max_events)
+        return self._execute(arrivals, max_events, admission)
 
-    def _execute(self, arrivals: list, max_events: int | None):
+    def _execute(self, arrivals: list, max_events: int | None, gate=None):
+        from .admission import DELAY, REJECT, AdmissionRequest
         from .workload import DagStats, WorkloadResult
         # per-run counter reset: a reused Simulator must not report the
         # previous runs' completions in this run's completed/throughput
@@ -333,8 +363,12 @@ class Simulator:
         # running streaming / same-type counters per cluster for interference
         running: dict[TAO, TraceRecord] = {}
 
-        for at, dag_id, dag, name in arrivals:
-            heapq.heappush(events, (at, next(seq), ARRIVE, (dag_id, dag, name)))
+        # ARRIVE payload: (dag_id, dag, name, tenant, request) — request is
+        # None until the gate first sees the DAG, then carries attempt count
+        for at, dag_id, dag, name, tenant in arrivals:
+            heapq.heappush(events,
+                           (at, next(seq), ARRIVE,
+                            (dag_id, dag, name, tenant, None)))
 
         def cluster_of(worker: int) -> str:
             return self.spec.class_of(worker)
@@ -497,10 +531,36 @@ class Simulator:
                 raise RuntimeError("simulator exceeded max_events (livelock?)")
             now, _, kind, payload = heapq.heappop(events)
             if kind == ARRIVE:
-                dag_id, dag, name = payload
+                dag_id, dag, name, tenant, req = payload
+                st = stats.get(dag_id)
+                if st is None:   # first evaluation: now == DagArrival.at
+                    st = DagStats.for_arrival(dag_id, name, now, len(dag),
+                                              tenant=tenant)
+                    stats[dag_id] = st
+                # empty DAGs bypass the gate (done on arrival, consume
+                # nothing); everything else asks admit/delay/reject
+                if gate is not None and len(dag) > 0:
+                    if req is None:
+                        req = AdmissionRequest(dag_id=dag_id, tenant=tenant,
+                                               n_taos=len(dag), arrival=now)
+                    verdict = gate.decide(req, now,
+                                          self.core.admission_signals())
+                    if verdict.action == DELAY:
+                        req.attempts += 1
+                        # strictly-future retry: a gate bug must surface as
+                        # max_events, not an infinite same-time loop
+                        retry = max(verdict.retry_at, now + 1e-9)
+                        heapq.heappush(events,
+                                       (retry, next(seq), ARRIVE,
+                                        (dag_id, dag, name, tenant, req)))
+                        continue
+                    if verdict.action == REJECT:
+                        st.mark_rejected()
+                        gate.on_reject(req, now)
+                        continue
+                    gate.on_admit(req, now)
+                st.mark_admitted(now)
                 roots = self.core.prepare(dag, dag_id=dag_id)
-                st = DagStats.for_arrival(dag_id, name, now, len(dag))
-                stats[dag_id] = st
                 for r in roots:
                     enqueue_ready(r, waker=0, t0=now)
                 continue
@@ -518,6 +578,10 @@ class Simulator:
             st = stats.get(tao.dag_id)
             if st is not None:
                 st.record_completion(now)
+                if gate is not None and st.done:
+                    # feedback signal for adaptive gates (sojourn EWMAs)
+                    gate.on_dag_done(st.tenant, st.sojourn, now,
+                                     n_taos=st.n_taos)
             # freed members look for work
             for m in rec.participants:
                 if free_time[m] <= now + 1e-12 and m not in self.failed:

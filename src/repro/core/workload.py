@@ -19,11 +19,28 @@ Criticality namespaces: each admitted DAG keeps its own criticality scale
 (a 5-node DAG's root must still count as critical next to a 3000-node
 tenant), which ``SchedulerCore`` implements as per-``dag_id`` multisets.
 
+Admission control: every arrival carries a *tenant* label, and both
+vehicles route arrivals through an optional
+:class:`~repro.core.admission.AdmissionGate` before any TAO reaches the
+scheduler.  ``DagStats`` therefore distinguishes *arrival* (the stream
+timestamp) from *admitted* (when the gate let the DAG in) and records
+``rejected`` outcomes; ``WorkloadResult`` aggregates goodput and
+per-tenant SLO attainment on top of the sojourn percentiles.
+
 This module holds only data/aggregation; execution is vehicle-agnostic —
 :meth:`repro.core.simulator.Simulator.run_workload` replays the stream in
 virtual time, :meth:`repro.core.runtime.ThreadedRuntime.run_workload`
 admits the same stream at real wall-clock offsets into the live thread
 pool.  Both return a ``WorkloadResult``.
+
+Thread-safety contract: everything here is passive data.  ``Workload`` is
+built single-threaded and only read during a run; ``DagStats`` objects
+are mutated by exactly one simulator event loop, or under the threaded
+runtime's ``_stats_lock`` — they carry no locks of their own.  There are
+no fast/slow path variants in this module: aggregation (``percentile``,
+the ``WorkloadResult`` helpers) is deterministic, interpolation-free code
+shared verbatim by both vehicles, which is what makes cross-vehicle
+latency reports comparable.
 """
 from __future__ import annotations
 
@@ -44,10 +61,14 @@ class DagArrival:
     at: float
     dag_id: int
     name: str = ""
+    # admission-control namespace: gates rate-limit / SLO-track per tenant,
+    # so DAGs of one tenant share a bucket and an SLO
+    tenant: str = "default"
 
     def __repr__(self) -> str:
         return (f"DagArrival(dag_id={self.dag_id}, at={self.at:.4f}, "
-                f"n_taos={len(self.dag)}, name={self.name!r})")
+                f"n_taos={len(self.dag)}, name={self.name!r}, "
+                f"tenant={self.tenant!r})")
 
 
 class Workload:
@@ -66,7 +87,8 @@ class Workload:
         self._ids = itertools.count(1)
 
     # -- construction -------------------------------------------------------
-    def add(self, dag: TaoDag, at: float = 0.0, name: str = "") -> DagArrival:
+    def add(self, dag: TaoDag, at: float = 0.0, name: str = "",
+            tenant: str = "default") -> DagArrival:
         if at < 0:
             raise ValueError(f"arrival time must be >= 0, got {at}")
         if id(dag) in self._seen_obj_ids:
@@ -78,19 +100,21 @@ class Workload:
                 "submit it again")
         did = next(self._ids)
         arr = DagArrival(dag=dag, at=float(at), dag_id=did,
-                         name=name or f"dag{did}")
+                         name=name or f"dag{did}", tenant=tenant)
         self._arrivals.append(arr)
         self._seen_obj_ids.add(id(dag))
         return arr
 
     @classmethod
     def from_trace(cls, entries: Iterable[tuple]) -> "Workload":
-        """Trace-driven arrivals: iterable of ``(at, dag)`` or
-        ``(at, dag, name)`` tuples (any order; sorted on iteration)."""
+        """Trace-driven arrivals: iterable of ``(at, dag)``,
+        ``(at, dag, name)`` or ``(at, dag, name, tenant)`` tuples (any
+        order; sorted on iteration)."""
         wl = cls()
         for e in entries:
             at, dag, *rest = e
-            wl.add(dag, at=at, name=rest[0] if rest else "")
+            wl.add(dag, at=at, name=rest[0] if rest else "",
+                   tenant=rest[1] if len(rest) > 1 else "default")
         return wl
 
     # -- queries ------------------------------------------------------------
@@ -119,17 +143,34 @@ class DagStats:
     started: float = float("inf")    # first TAO execution start
     finished: float = float("nan")   # last TAO completion
     completed: int = 0               # TAOs committed so far
+    tenant: str = "default"
+    admitted: float = float("nan")   # when the admission gate let it in
+    rejected: bool = False           # gate dropped it; never executed
 
     @classmethod
     def for_arrival(cls, dag_id: int, name: str, arrival: float,
-                    n_taos: int) -> "DagStats":
+                    n_taos: int, tenant: str = "default") -> "DagStats":
         """Stats entry for a DAG joining the system; both execution
         vehicles use this so the degenerate rule (an empty DAG is done on
         arrival) lives in exactly one place."""
-        st = cls(dag_id=dag_id, name=name, arrival=arrival, n_taos=n_taos)
+        st = cls(dag_id=dag_id, name=name, arrival=arrival, n_taos=n_taos,
+                 tenant=tenant)
         if n_taos == 0:
+            # empty DAGs bypass the admission gate on both vehicles
+            st.admitted = arrival
             st.started = st.finished = arrival
         return st
+
+    def mark_admitted(self, t: float) -> None:
+        """The admission gate let this DAG in at time ``t`` (both vehicles
+        call this before releasing the DAG's roots)."""
+        self.admitted = t
+        if self.n_taos == 0:      # delayed empty DAG: done at admission
+            self.started = self.finished = t
+
+    def mark_rejected(self) -> None:
+        """The admission gate dropped this DAG; it will never execute."""
+        self.rejected = True
 
     def record_completion(self, t: float) -> None:
         """One TAO of this DAG committed at time ``t``; the last one stamps
@@ -140,7 +181,11 @@ class DagStats:
 
     @property
     def done(self) -> bool:
-        return self.completed == self.n_taos
+        return not self.rejected and self.completed == self.n_taos
+
+    @property
+    def was_admitted(self) -> bool:
+        return math.isfinite(self.admitted)
 
     @property
     def has_started(self) -> bool:
@@ -175,6 +220,15 @@ class DagStats:
             return float("nan")
         return self.started - self.arrival
 
+    @property
+    def admission_delay(self) -> float:
+        """Time the DAG was held at the admission gate before entering
+        (0 for ungated / immediately-admitted DAGs; nan if never
+        admitted — i.e. rejected or still queued at the gate)."""
+        if not self.was_admitted:
+            return float("nan")
+        return self.admitted - self.arrival
+
 
 def percentile(values: Sequence[float], q: float) -> float:
     """Nearest-rank percentile (q in [0, 100]); nan on empty input.
@@ -191,6 +245,17 @@ def percentile(values: Sequence[float], q: float) -> float:
     return float(s[int(rank) - 1])
 
 
+def _slo_of(st: "DagStats", slo) -> float:
+    """Resolve an SLO spec — a float (uniform), a ``tenant -> target``
+    mapping (missing tenants get inf, i.e. always attained), or a
+    callable ``DagStats -> target`` — to this DAG's target sojourn."""
+    if callable(slo):
+        return float(slo(st))
+    if isinstance(slo, dict):
+        return float(slo.get(st.tenant, float("inf")))
+    return float(slo)
+
+
 @dataclasses.dataclass
 class WorkloadResult(SimResult):
     """SimResult + per-DAG latency table for a multi-tenant run."""
@@ -199,6 +264,48 @@ class WorkloadResult(SimResult):
 
     def sojourns(self) -> list[float]:
         return [s.sojourn for s in self.per_dag.values() if s.done]
+
+    # -- admission accounting ------------------------------------------------
+    def admitted_dags(self) -> list:
+        return [s for s in self.per_dag.values() if s.was_admitted]
+
+    def rejected_dags(self) -> list:
+        return [s for s in self.per_dag.values() if s.rejected]
+
+    @property
+    def n_rejected(self) -> int:
+        return sum(1 for s in self.per_dag.values() if s.rejected)
+
+    def mean_admission_delay(self) -> float:
+        """Mean gate-queueing time over admitted DAGs (0 when ungated)."""
+        ds = [s.admission_delay for s in self.admitted_dags()]
+        return sum(ds) / len(ds) if ds else float("nan")
+
+    def per_tenant(self) -> dict:
+        """``tenant -> [DagStats]`` grouping, in dag_id order."""
+        out: dict[str, list] = {}
+        for _, st in sorted(self.per_dag.items()):
+            out.setdefault(st.tenant, []).append(st)
+        return out
+
+    def goodput(self, slo) -> int:
+        """Completed DAGs whose sojourn met their SLO (the admission
+        bench's headline metric — a rejected or SLO-missing DAG is not
+        good output, however fast the rest ran).  ``slo`` as in
+        :func:`_slo_of`: float, ``tenant -> target`` dict, or callable."""
+        return sum(1 for s in self.per_dag.values()
+                   if s.done and s.sojourn <= _slo_of(s, slo))
+
+    def slo_attainment(self, slo) -> dict:
+        """``tenant -> fraction of its *arrivals* that completed within
+        SLO``.  Rejected and never-finished DAGs count against the tenant
+        (an operator cares what share of submitted work came back in
+        time, not what share of the survivors did)."""
+        out: dict[str, float] = {}
+        for tenant, stats in self.per_tenant().items():
+            ok = sum(1 for s in stats if s.done and s.sojourn <= _slo_of(s, slo))
+            out[tenant] = ok / len(stats)
+        return out
 
     def sojourn_p50(self) -> float:
         return percentile(self.sojourns(), 50)
@@ -211,8 +318,10 @@ class WorkloadResult(SimResult):
         return sum(so) / len(so) if so else float("nan")
 
     def __repr__(self) -> str:
+        rej = f", rejected={self.n_rejected}" if self.n_rejected else ""
         return (f"WorkloadResult(dags={len(self.per_dag)}, "
                 f"makespan={self.makespan:.4f}s, "
                 f"p50={self.sojourn_p50():.4f}s, "
                 f"p99={self.sojourn_p99():.4f}s, "
-                f"completed={self.completed}, util={self.utilization:.2%})")
+                f"completed={self.completed}{rej}, "
+                f"util={self.utilization:.2%})")

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Docs-health check: fail on broken intra-repo links in Markdown files.
+
+Scans every tracked ``*.md`` under the repo root (skipping dot-directories
+and caches) for inline links/images ``[text](target)`` and verifies that
+
+* relative file targets exist (resolved against the linking file's dir),
+* ``path#anchor`` targets point at an existing heading in that file,
+* ``#anchor``-only targets point at a heading in the linking file itself.
+
+External schemes (http/https/mailto) are ignored — this is a *repo
+consistency* check, not a web crawler, and CI must not flake on the
+internet.  Exit status: 0 when clean, 1 with a per-link report otherwise.
+
+Run:  python tools/check_docs.py  [root-dir]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules",
+             ".venv", "venv"}
+# inline links/images; deliberately simple — our docs use no reference-style
+# links or angle-bracket destinations
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens.
+    Close enough for ASCII docs; duplicate-heading -1 suffixes are honored
+    by pre-slugging the duplicates when they occur."""
+    s = heading.strip().lower()
+    # strip inline markup but NOT underscores: GitHub keeps them (a
+    # heading naming ALL_POLICY_NAMES anchors with its underscores intact)
+    s = re.sub(r"[`*]", "", s)
+    s = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", s)  # links in headings
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(md_path: pathlib.Path) -> set:
+    seen: dict[str, int] = {}
+    out = set()
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def md_files(root: pathlib.Path):
+    for p in sorted(root.rglob("*.md")):
+        if any(part in SKIP_DIRS or part.startswith(".")
+               for part in p.relative_to(root).parts[:-1]):
+            continue
+        yield p
+
+
+def check(root: pathlib.Path) -> list:
+    errors = []
+    anchor_cache: dict[pathlib.Path, set] = {}
+
+    def anchors(p: pathlib.Path) -> set:
+        if p not in anchor_cache:
+            anchor_cache[p] = anchors_of(p)
+        return anchor_cache[p]
+
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        # strip fenced code blocks so example links aren't validated
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, frag = target.partition("#")
+            rel = md.relative_to(root)
+            if not path_part:                      # same-file anchor
+                if frag and frag not in anchors(md):
+                    errors.append(f"{rel}: broken anchor '#{frag}'")
+                continue
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link '{target}' "
+                              f"(no such file: {path_part})")
+                continue
+            if frag and dest.suffix == ".md" and frag not in anchors(dest):
+                errors.append(f"{rel}: broken anchor '{target}' "
+                              f"('#{frag}' not a heading in {path_part})")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    n = 0
+    errors = check(root)
+    for p in md_files(root):
+        n += 1
+    if errors:
+        print(f"docs-health: {len(errors)} broken link(s) "
+              f"across {n} markdown file(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs-health: OK ({n} markdown files, all intra-repo links valid)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
