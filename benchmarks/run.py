@@ -9,8 +9,11 @@ figure's own metric, e.g. TAOs/s for Fig 6).
            scheduling policies, width hints 1 and 4.
   tab1/2 — task-molding impact (paper Tables 1 and 2).
   multi-dag — concurrent workload stream; `--vehicle {sim,threaded}` picks
-           the executor and `--admission {none,token-bucket,slo-adaptive}`
-           swaps the policy sweep for the bursty-tenant admission A/B.
+           the executor, `--admission {none,token-bucket,slo-adaptive}`
+           swaps the policy sweep for the bursty-tenant admission A/B, and
+           `--preemption {none,backlog,critical-boost}` (composing with
+           `--admission`) A/Bs chunk-granularity preemption of running
+           TAOs on the same bursty stream.
   serve  — serving orchestrator (beyond-paper: prefill/decode placement).
   train  — training-DAG orchestrator at fleet scale.
   roofline — per (arch x shape) roofline terms from the dry-run artifacts
@@ -182,6 +185,86 @@ def multi_dag_bench(n_dags: int = 16, n_tasks: int = 150,
 
 
 # ---------------------------------------------------------------------------
+# beyond-paper: the shared bursty two-tenant A/B harness
+# ---------------------------------------------------------------------------
+def _bursty_setup(vehicle: str, gate: str, n_chunks: int = 1):
+    """Per-vehicle scaffolding the admission and preemption A/B benches
+    share: pool/SLO/gate-knob tables plus the stream and executor.
+
+    Returns ``(tag, slo, gate_kw, execute)`` where
+    ``execute(gate_obj, ctrl_obj)`` runs one configuration of the bursty
+    two-tenant stream under ``molding:adaptive``.  ``n_chunks`` sets the
+    chunk boundaries per TAO (1 = monolithic, the admission bench's
+    historical payload; the threaded payload always totals ~1 ms of
+    GIL-releasing sleep split across the chunks)."""
+    import time as _time
+    from repro.core import (ChunkedWork, Simulator, ThreadedRuntime,
+                            bursty_workload, fleet, hikey960, make_policy)
+
+    if vehicle == "threaded":
+        spec, tag = hikey960(), "threaded8"
+        slo = {"steady": 0.12, "burst": 0.6}
+        gate_kw = {
+            "none": {},
+            # headroom sized for the 8-worker pool: the backlog limit must
+            # exceed one steady DAG (25 TAOs) but not two burst DAGs (200)
+            "slo-adaptive": dict(slo=0.12, slo_per_tenant={"burst": 0.6},
+                                 headroom=16.0),
+            "token-bucket": dict(rate=30.0, burst=3, max_delay=0.5),
+        }[gate]
+        sleep_s = 0.001 / n_chunks
+
+        def stream():
+            wl = bursty_workload(n_steady=6, steady_rate=15.0,
+                                 steady_tasks=25, n_burst=12, burst_at=0.05,
+                                 burst_rate=200.0, burst_tasks=100, seed=2)
+            for arr in wl:
+                for node in arr.dag.nodes:
+                    node.work = ChunkedWork(lambda i: _time.sleep(sleep_s),
+                                            n_chunks)
+            return wl
+
+        def execute(gate_obj, ctrl_obj=None):
+            rt = ThreadedRuntime(spec, make_policy("molding:adaptive"),
+                                 seed=1)
+            return rt.run_workload(stream(), timeout_s=120.0,
+                                   admission=gate_obj, preemption=ctrl_obj)
+    else:
+        spec, tag = fleet(48, 16), "fleet64"
+        slo = {"steady": 0.5, "burst": 3.0}
+        gate_kw = {
+            "none": {},
+            "slo-adaptive": dict(slo=0.5, slo_per_tenant={"burst": 3.0}),
+            "token-bucket": dict(rate=4.0, burst=3, max_delay=2.0),
+        }[gate]
+
+        def stream():
+            return bursty_workload(seed=1, n_chunks=n_chunks)
+
+        def execute(gate_obj, ctrl_obj=None):
+            sim = Simulator(spec, make_policy("molding:adaptive"), seed=1)
+            return sim.run_workload(stream(), admission=gate_obj,
+                                    preemption=ctrl_obj)
+
+    return tag, slo, gate_kw, execute
+
+
+def _tenant_p99(res, tenant):
+    from repro.core import percentile
+    return percentile([s.sojourn for s in res.per_tenant().get(tenant, [])
+                       if s.done], 99)
+
+
+def _median_run(make_run, vehicle: str):
+    """The simulator is deterministic; the threaded vehicle is real wall
+    clock on a possibly-noisy host, so take the median-steady-p99 run
+    of 3 there."""
+    runs = [make_run() for _ in range(3 if vehicle == "threaded" else 1)]
+    runs.sort(key=lambda r: _tenant_p99(r, "steady"))
+    return runs[len(runs) // 2]
+
+
+# ---------------------------------------------------------------------------
 # beyond-paper: SLO-aware admission control on a bursty two-tenant stream
 # ---------------------------------------------------------------------------
 def admission_bench(vehicle: str = "sim",
@@ -200,66 +283,17 @@ def admission_bench(vehicle: str = "sim",
     the GIL, so the 8-thread pool genuinely saturates) and scales the
     stream down to keep the bench a few seconds of wall-clock.
     """
-    import time as _time
-    from repro.core import (ChunkedWork, Simulator, ThreadedRuntime,
-                            bursty_workload, fleet, hikey960, make_gate,
-                            make_policy, percentile)
+    from repro.core import make_gate, percentile
 
-    if vehicle == "threaded":
-        spec, tag = hikey960(), "threaded8"
-        slo = {"steady": 0.12, "burst": 0.6}
-        gate_kw = {
-            # headroom sized for the 8-worker pool: the backlog limit must
-            # exceed one steady DAG (25 TAOs) but not two burst DAGs (200)
-            "slo-adaptive": dict(slo=0.12, slo_per_tenant={"burst": 0.6},
-                                 headroom=16.0),
-            "token-bucket": dict(rate=30.0, burst=3, max_delay=0.5),
-        }[gate]
-
-        def stream():
-            wl = bursty_workload(n_steady=6, steady_rate=15.0,
-                                 steady_tasks=25, n_burst=12, burst_at=0.05,
-                                 burst_rate=200.0, burst_tasks=100, seed=2)
-            for arr in wl:
-                for node in arr.dag.nodes:
-                    node.work = ChunkedWork(lambda i: _time.sleep(0.001), 1)
-            return wl
-
-        def execute(gate_obj):
-            rt = ThreadedRuntime(spec, make_policy("molding:adaptive"),
-                                 seed=1)
-            return rt.run_workload(stream(), timeout_s=120.0,
-                                   admission=gate_obj)
-    else:
-        spec, tag = fleet(48, 16), "fleet64"
-        slo = {"steady": 0.5, "burst": 3.0}
-        gate_kw = {
-            "slo-adaptive": dict(slo=0.5, slo_per_tenant={"burst": 3.0}),
-            "token-bucket": dict(rate=4.0, burst=3, max_delay=2.0),
-        }[gate]
-
-        def stream():
-            return bursty_workload(seed=1)
-
-        def execute(gate_obj):
-            sim = Simulator(spec, make_policy("molding:adaptive"), seed=1)
-            return sim.run_workload(stream(), admission=gate_obj)
-
-    def tenant_p99(res, tenant):
-        return percentile([s.sojourn for s in res.per_tenant().get(tenant, [])
-                           if s.done], 99)
-
-    # the simulator is deterministic; the threaded vehicle is real wall
-    # clock on a possibly-noisy host, so take the median-p99 run of 3
-    repeats = 3 if vehicle == "threaded" else 1
+    tag, slo, gate_kw, execute = _bursty_setup(vehicle, gate)
+    tenant_p99 = _tenant_p99
 
     results = {}
     for name in ("none", gate):
-        runs = [execute(make_gate(name,
-                                  **(gate_kw if name == gate else {})))
-                for _ in range(repeats)]
-        runs.sort(key=lambda r: tenant_p99(r, "steady"))
-        res = runs[len(runs) // 2]
+        res = _median_run(
+            lambda: execute(make_gate(name,
+                                      **(gate_kw if name == gate else {}))),
+            vehicle)
         results[name] = res
         for tenant, stats in res.per_tenant().items():
             so = [s.sojourn for s in stats if s.done]
@@ -279,6 +313,63 @@ def admission_bench(vehicle: str = "sim",
           f"{tenant_p99(base, 'steady'):.4f}s -> "
           f"{tenant_p99(gated, 'steady'):.4f}s; goodput "
           f"{base.goodput(slo)} -> {gated.goodput(slo)}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: chunk-granularity preemption on the bursty two-tenant stream
+# ---------------------------------------------------------------------------
+def preemption_bench(vehicle: str = "sim", gate: str = "slo-adaptive",
+                     controller: str = "backlog") -> None:
+    """A/B the selected preemption controller against no preemption.
+
+    Both configurations run the *same* chunked bursty two-tenant stream
+    (``bursty_workload(n_chunks=4)`` — 4 yield points per TAO) under
+    ``molding:adaptive`` and the selected admission gate (``none`` for an
+    ungated A/B), so the delta isolates what displacing *running* work
+    adds on top of gating *arrivals*.  Rows report per-tenant sojourn
+    p50/p99 and displacement counts (the fairness surface: the steady
+    tenant must never be the victim), plus goodput.  The composed
+    ``--admission slo-adaptive --preemption backlog`` run is the
+    acceptance A/B: steady-tenant p99 must improve over the gate alone
+    with goodput non-regressing.
+    """
+    from repro.core import make_gate, make_preemption, percentile
+
+    # 4 yield points per TAO: the preemptible variant of the same stream
+    # the admission bench runs monolithic
+    tag, slo, gate_kw, execute = _bursty_setup(vehicle, gate, n_chunks=4)
+    tenant_p99 = _tenant_p99
+
+    results = {}
+    for name in ("none", controller):
+        res = _median_run(
+            lambda: execute(
+                make_gate(gate, **gate_kw) if gate != "none" else None,
+                None if name == "none" else make_preemption(name)),
+            vehicle)
+        results[name] = res
+        displaced = res.preemptions_by_tenant()
+        for tenant, stats in res.per_tenant().items():
+            so = [s.sojourn for s in stats if s.done]
+            emit(f"preempt.{tag}.{gate}+{name}.{tenant}",
+                 percentile(so, 99) * 1e6,
+                 f"p50={percentile(so, 50):.4f}s;"
+                 f"p99={percentile(so, 99):.4f}s;"
+                 f"displaced={displaced.get(tenant, 0)};"
+                 f"admitted={sum(1 for s in stats if s.was_admitted)}"
+                 f"/{len(stats)}")
+        emit(f"preempt.{tag}.{gate}+{name}.total",
+             (res.mean_preemption_delay() if res.n_preemptions else 0.0)
+             * 1e6,
+             f"goodput={res.goodput(slo)};completed={res.completed};"
+             f"preemptions={res.n_preemptions};"
+             f"makespan={res.makespan:.4f}s")
+    base, treat = results["none"], results[controller]
+    print(f"# preemption {controller} vs none [{tag}, admission={gate}]: "
+          f"steady p99 {tenant_p99(base, 'steady'):.4f}s -> "
+          f"{tenant_p99(treat, 'steady'):.4f}s; goodput "
+          f"{base.goodput(slo)} -> {treat.goodput(slo)}; "
+          f"victims by tenant {treat.preemptions_by_tenant()}", flush=True)
 
 
 # ---------------------------------------------------------------------------
@@ -360,13 +451,16 @@ def main() -> None:
     # all selected sections run, unknown names abort with the valid list.
     # `--vehicle {sim,threaded}` picks the multi-dag execution vehicle;
     # `--admission {none,token-bucket,slo-adaptive}` replaces the multi-dag
-    # policy sweep with the bursty-tenant admission A/B bench.
-    from repro.core import ALL_GATE_NAMES
+    # policy sweep with the bursty-tenant admission A/B bench;
+    # `--preemption {none,backlog,critical-boost}` composes with it and
+    # runs the running-work displacement A/B instead.
+    from repro.core import ALL_GATE_NAMES, ALL_PREEMPTION_NAMES
 
     args = sys.argv[1:]
     selected: list[str] = []
     vehicle = "sim"
     admission = "none"
+    preemption = "none"
     i = 0
     while i < len(args):
         if args[i] == "--workload":
@@ -391,6 +485,14 @@ def main() -> None:
             admission = args[i]
         elif args[i].startswith("--admission="):
             admission = args[i].split("=", 1)[1]
+        elif args[i] == "--preemption":
+            i += 1
+            if i >= len(args):
+                sys.exit("--preemption needs a value "
+                         "(e.g. --preemption backlog)")
+            preemption = args[i]
+        elif args[i].startswith("--preemption="):
+            preemption = args[i].split("=", 1)[1]
         else:
             selected.append(args[i])
         i += 1
@@ -400,6 +502,9 @@ def main() -> None:
     if admission not in ALL_GATE_NAMES:
         sys.exit(f"unknown admission gate: {admission} "
                  f"(choose from: {', '.join(ALL_GATE_NAMES)})")
+    if preemption not in ALL_PREEMPTION_NAMES:
+        sys.exit(f"unknown preemption controller: {preemption} "
+                 f"(choose from: {', '.join(ALL_PREEMPTION_NAMES)})")
     unknown = [s for s in selected if s not in SECTIONS]
     if unknown:
         sys.exit(f"unknown section(s): {', '.join(unknown)} "
@@ -419,7 +524,10 @@ def main() -> None:
     if sel("tab"):
         tables_molding()
     if sel("multi-dag", "multidag"):
-        if admission == "none":
+        if preemption != "none":
+            preemption_bench(vehicle=vehicle, gate=admission,
+                             controller=preemption)
+        elif admission == "none":
             multi_dag_bench(vehicle=vehicle)
         else:
             admission_bench(vehicle=vehicle, gate=admission)

@@ -13,6 +13,10 @@ from .policies import (ALL_POLICY_NAMES, AdaptivePolicy,
                        CriticalityAwarePolicy, CriticalityPTTPolicy,
                        HomogeneousPolicy, MoldingPolicy, Placement, Policy,
                        WeightBasedPolicy, make_policy)
+from .preemption import (ALL_PREEMPTION_NAMES, BacklogPreemption, ChunkCursor,
+                         CriticalBoostPreemption, NoPreemption,
+                         PreemptionController, RunningView, chunk_count,
+                         make_preemption)
 from .ptt import PTT, PTTRegistry
 from .runtime import ChunkedWork, ThreadedRuntime
 from .scheduler import SchedulerCore
@@ -32,6 +36,9 @@ __all__ = [
     "ALL_POLICY_NAMES", "AdaptivePolicy", "CriticalityAwarePolicy",
     "CriticalityPTTPolicy", "HomogeneousPolicy", "MoldingPolicy",
     "Placement", "Policy", "WeightBasedPolicy", "make_policy",
+    "ALL_PREEMPTION_NAMES", "BacklogPreemption", "ChunkCursor",
+    "CriticalBoostPreemption", "NoPreemption", "PreemptionController",
+    "RunningView", "chunk_count", "make_preemption",
     "PTT", "PTTRegistry", "ChunkedWork", "ThreadedRuntime", "SchedulerCore",
     "KernelModel", "SimResult", "Simulator", "paper_kernel_models",
     "run_policy",

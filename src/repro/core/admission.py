@@ -32,6 +32,13 @@ Empty DAGs (zero TAOs) bypass the gate on both vehicles: they consume no
 resources and are "done" on arrival, so charging tokens or delaying them
 would only skew accounting.
 
+Gate feedback to preemption: a DELAY verdict is the gate saying "this
+tenant is harming the pool right now" — both vehicles forward it to the
+optional :class:`~repro.core.preemption.PreemptionController`
+(``on_gate_feedback``), which may then displace that tenant's *running*
+TAOs at chunk boundaries: the admission layer throttles arrivals, the
+preemption layer drains the in-flight work that got them throttled.
+
 Thread-safety contract
 ----------------------
 ``decide`` / ``on_admit`` / ``on_reject`` are only ever called from a
@@ -72,12 +79,18 @@ class AdmissionDecision:
     ``retry_at`` is only meaningful for ``DELAY``: the earliest time (same
     clock as ``now`` handed to :meth:`AdmissionGate.decide`) at which the
     vehicle re-presents the request.  ``reason`` is a short human string
-    surfaced by benchmarks/examples, never parsed.
+    surfaced by benchmarks/examples, never parsed.  ``dominant`` is the
+    structured signal the preemption layer keys on: ``True`` when the
+    verdict was driven by the tenant *dominating the pool's backlog*
+    (it is harming others), ``False`` when the tenant is merely degraded
+    itself — only dominance-throttled tenants are eligible for
+    running-work displacement.
     """
 
     action: str
     retry_at: float = 0.0
     reason: str = ""
+    dominant: bool = False
 
 
 _ADMIT_NOW = AdmissionDecision(ADMIT)
@@ -338,9 +351,10 @@ class SloAdaptiveGate(AdmissionGate):
         why = "p99 degraded" if degraded else "dominant backlog"
         if waited + self.delay_quantum > self.max_delay:
             return AdmissionDecision(
-                REJECT, reason=f"{why} after {waited:.3f}s queued")
+                REJECT, reason=f"{why} after {waited:.3f}s queued",
+                dominant=dominant)
         return AdmissionDecision(DELAY, retry_at=now + self.delay_quantum,
-                                 reason=why)
+                                 reason=why, dominant=dominant)
 
     def on_admit(self, req: AdmissionRequest, now: float) -> None:
         with self._lock:

@@ -40,6 +40,13 @@ class TAO:
     # only comparable within one DAG, so the scheduler keeps one criticality
     # namespace per dag_id (0 = the legacy single-DAG namespace).
     dag_id: int = 0
+    # chunk boundaries (preemption yield points) for payloads that carry no
+    # chunk structure of their own; ChunkedWork payloads declare n_chunks
+    # themselves and take precedence (see repro.core.preemption.chunk_count)
+    n_chunks: int = 1
+    # ChunkCursor execution state, created lazily by the vehicles when the
+    # TAO first executes under a preemption-capable path; cleared per run
+    cursor: Any = None
 
     def __hash__(self) -> int:  # identity hash: TAOs are unique nodes
         return id(self)
@@ -136,6 +143,7 @@ class TaoDag:
             n.pending = len(n.parents)
             n.assigned_width = 0
             n.assigned_leader = -1
+            n.cursor = None
 
     def validate(self) -> None:
         self.topological()  # raises on cycle

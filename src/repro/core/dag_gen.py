@@ -147,6 +147,7 @@ def bursty_workload(
     degrees: Sequence[float] = (1.62, 3.03, 8.06),
     seed: int = 0,
     width_hint: int = 1,
+    n_chunks: int = 1,
 ):
     """Two-tenant admission-control stress stream.
 
@@ -158,6 +159,11 @@ def bursty_workload(
     the batch customer whose spike would otherwise blow the steady
     tenant's p99.  Admission gates key on ``DagArrival.tenant``, so this
     is the canonical input for demonstrating per-tenant backpressure.
+
+    ``n_chunks > 1`` stamps every TAO with that many chunk boundaries
+    (``TAO.n_chunks``), making the stream *preemptible* at chunk
+    granularity — the canonical input for the preemption controllers
+    too.  The default (1) leaves TAOs monolithic, exactly as before.
     """
     from .workload import Workload
 
@@ -167,12 +173,16 @@ def bursty_workload(
     for i in range(1, n_steady + 1):
         dag = random_dag(steady_tasks, target_degree=rng.choice(list(degrees)),
                          seed=rng.randrange(2 ** 31), width_hint=width_hint)
+        for node in dag.nodes:
+            node.n_chunks = n_chunks
         wl.add(dag, at=t, name=f"steady{i}", tenant="steady")
         t += rng.expovariate(steady_rate)
     t = burst_at
     for i in range(1, n_burst + 1):
         dag = random_dag(burst_tasks, target_degree=rng.choice(list(degrees)),
                          seed=rng.randrange(2 ** 31), width_hint=width_hint)
+        for node in dag.nodes:
+            node.n_chunks = n_chunks
         wl.add(dag, at=t, name=f"burst{i}", tenant="burst")
         t += rng.expovariate(burst_rate)
     return wl

@@ -271,6 +271,11 @@ class MoldingPolicy(Policy):
       themselves (paper: "the recorded execution time for that width x the
       width has to be lower than the current execution time").  Untried widths
       are explored first (zero-init).
+
+    Continuations: a preempted TAO re-entering ``admit`` carries a
+    mid-way :class:`~repro.core.preemption.ChunkCursor`; its molded width
+    is capped at the chunks it has left (extra members would join an
+    exhausted cursor and claim nothing).  Fresh TAOs are untouched.
     """
 
     name = "molding"
@@ -332,6 +337,16 @@ class MoldingPolicy(Policy):
         if molded is None:
             leader = leader_of(base.target, cur)
             molded = self._history_based_width(tao, ctx, leader, cur)
+        # a preempted TAO's continuation (cursor mid-way) carries fewer
+        # chunks than the original: never mold it wider than the chunks it
+        # has left — extra members would join and find nothing to claim.
+        # Fresh TAOs (cursor absent or at 0) are untouched, so schedules
+        # without preemption stay byte-identical.
+        cursor = tao.cursor
+        if cursor is not None and cursor.next_chunk > 0:
+            rem = max(1, cursor.unclaimed)
+            while molded > rem:
+                molded //= 2
         return Placement(target=base.target, width=molded)
 
 

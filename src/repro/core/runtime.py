@@ -12,7 +12,13 @@ Work payloads (``TAO.work``) are ``ChunkedWork``: ``n_chunks`` independent
 chunk callables (here: jitted JAX computations, which release the GIL while
 executing, so threads genuinely overlap).  This is exactly the paper's model
 of a TAO as "a black box filled with work" with an embedded scheduler —
-the chunk counter *is* the embedded scheduler.
+the chunk counter *is* the embedded scheduler.  That counter is the shared
+:class:`~repro.core.preemption.ChunkCursor`: members claim chunks from it,
+and a yield requested by a :class:`~repro.core.preemption.\
+PreemptionController` is observed *between* chunk claims (cooperative — no
+thread is ever killed), after which the last member repackages the
+unclaimed chunks as a continuation and requeues the TAO through the normal
+``SchedulerCore.admit`` path with molding free to pick a new place.
 
 ``run`` executes one DAG offline; ``run_workload`` executes a multi-DAG
 ``Workload`` stream *online*: an admission thread sleeps until each
@@ -34,14 +40,28 @@ TAOs will never execute.
 
 Thread-safety contract: state is partitioned by lock — per-worker ready
 deques (``_qlocks``) and assembly queues (``_alocks``), the stats/trace
-table (``_stats_lock``), the completion target (``_total_lock``), and the
-park/wake machinery (``_work_cv`` guarding ``_work_epoch``/``_n_parked``).
-``SchedulerCore``/PTT/gate objects carry their own locks.  Worker threads,
-the admitter thread and the caller only communicate through these guarded
-structures plus the ``_done`` event; ``_error`` is published before
-``_set_done`` so the join in ``_run_workers`` observes it.  The gate's
-``decide`` runs only on the admitter thread; ``on_dag_done`` is called
-from worker threads (outside ``_stats_lock``) and gates lock internally.
+table (``_stats_lock``), the completion target (``_total_lock``), the
+running-execution registry (``_run_lock`` guarding ``_running_execs``),
+and the park/wake machinery (``_work_cv`` guarding
+``_work_epoch``/``_n_parked``).  ``SchedulerCore``/PTT/gate objects carry
+their own locks.  Worker threads, the admitter thread and the caller only
+communicate through these guarded structures plus the ``_done`` event;
+``_error`` is published before ``_set_done`` so the join in
+``_run_workers`` observes it.  The gate's ``decide`` runs only on the
+admitter thread; ``on_dag_done`` is called from worker threads (outside
+``_stats_lock``) and gates lock internally.
+
+Yield-point contract: preemption controllers are consulted from worker
+threads (``_enqueue_ready``) and the admitter thread (gate feedback)
+concurrently — they are stateless by contract.  A victim's
+``ChunkCursor.request_yield`` is a locked flag flip; members observe it
+only between chunk claims, so a chunk that started always finishes on the
+member that claimed it.  The last member to leave a yielded execution owns
+the requeue transition (registry pop -> partial trace record ->
+``core.release`` -> ``_enqueue_ready``); no other thread touches that TAO
+until it reappears in a ready queue, and the queue lock orders the
+hand-off (``cursor.preempted_at`` is written before the enqueue and read
+by the worker that later distributes the continuation).
 
 Fast/slow-path invariant: idle workers park on a Condition signalled on
 every enqueue/distribute (epoch counter closes the missed-wakeup race) —
@@ -63,6 +83,7 @@ from typing import Any, Callable
 from .dag import TAO, TaoDag
 from .places import ClusterSpec, leader_of, place_members
 from .policies import Policy
+from .preemption import RunningView, ensure_cursor, sorted_views
 from .scheduler import SchedulerCore
 from .simulator import TraceRecord
 
@@ -76,17 +97,26 @@ class ChunkedWork:
 
 
 class _TaoExec:
-    """Per-execution state of a TAO (chunk counter, membership)."""
+    """Per-segment state of a TAO execution (membership, timing).
 
-    __slots__ = ("tao", "leader", "width", "members", "next_chunk",
-                 "remaining_members", "start_time", "lock", "leader_start")
+    Chunk claiming lives in the TAO's :class:`ChunkCursor` (shared with
+    the simulator and persistent across preemption segments); this object
+    only tracks the members of the *current* place."""
+
+    __slots__ = ("tao", "leader", "width", "members", "cursor",
+                 "start_claims", "remaining_members", "start_time", "lock",
+                 "leader_start")
 
     def __init__(self, tao: TAO, leader: int, width: int, n_workers: int):
         self.tao = tao
         self.leader = leader
         self.width = width
         self.members = [m for m in place_members(leader, width) if m < n_workers]
-        self.next_chunk = 0
+        self.cursor = ensure_cursor(tao)
+        # chunks already spent when this segment began: eligibility for
+        # preemption requires progress *within* the segment (mirrors the
+        # simulator's at-least-one-chunk-per-segment guarantee)
+        self.start_claims = self.cursor.next_chunk
         self.remaining_members = len(self.members)
         self.start_time = 0.0
         self.leader_start = 0.0
@@ -125,6 +155,15 @@ class ThreadedRuntime:
         self._stats_lock = threading.Lock()
         self._total_lock = threading.Lock()    # rejection-time target shrink
         self._gate = None                      # workload-mode admission gate
+        self._preempt = None                   # workload-mode controller
+        self._running_execs: dict[TAO, _TaoExec] = {}
+        self._occupied_slots = 0               # member sum of running execs
+        self._run_lock = threading.Lock()      # guards the two above
+        self._backlog_ns: dict[str, int] = {}  # tenant -> admitted-not-done
+        #                                        TAOs (under _stats_lock)
+        self._throttled_ns: dict[str, int] = {}  # tenant -> pending
+        #                             dominance-DELAYed arrivals (ditto)
+        self._tenant_of: dict[int, str] = {}   # dag_id -> tenant
         self._threads: list[threading.Thread] = []
 
     # ------------------------------------------------------------------ admin
@@ -148,6 +187,12 @@ class ThreadedRuntime:
         self.core.reset_counters()
         self._total = total
         self._gate = None
+        self._preempt = None
+        self._running_execs = {}
+        self._occupied_slots = 0
+        self._backlog_ns = {}
+        self._throttled_ns = {}
+        self._tenant_of = {}
         self._done.clear()
         self._error = None
         self._trace = []
@@ -181,6 +226,102 @@ class ThreadedRuntime:
         with self._qlocks[placement.target]:
             self._ready[placement.target].append(tao)
         self._signal_work()
+        # preemption consult point 1: a ready TAO may displace running work
+        # (consulted after the enqueue so freed workers find it queued).
+        # The cheap wants_consult pre-gate keeps the unsaturated hot path
+        # from materializing views/backlog on every enqueue.
+        if self._preempt is not None:
+            with self._run_lock:
+                occupied = self._occupied_slots
+            signals = self.core.admission_signals()
+            if self._preempt.wants_consult(signals, occupied):
+                tenant = self._tenant_of.get(tao.dag_id, "default")
+                victims = self._preempt.on_ready(
+                    tao, tenant, self._running_views(), signals,
+                    self._tenant_backlog(), self._throttled())
+                self._yield_victims(victims)
+
+    # -------------------------------------------------------- preemption
+    def _tenant_backlog(self) -> dict:
+        """Per-tenant admitted-but-uncompleted TAO counts — the
+        SLO-dominance signal controllers measure against.  Maintained as
+        O(1) incremental counters (admission adds ``n_taos``, every TAO
+        commit subtracts one) so the hot consult path never scans the
+        per-DAG stats table."""
+        with self._stats_lock:
+            return dict(self._backlog_ns)
+
+    def _throttled(self) -> frozenset | None:
+        """Tenants the gate currently holds at the door for *dominating*
+        the backlog (``AdmissionDecision.dominant`` delays pending
+        re-presentation); ``None`` on ungated runs."""
+        if self._gate is None:
+            return None
+        with self._stats_lock:
+            return frozenset(t for t, c in self._throttled_ns.items() if c > 0)
+
+    def _running_views(self) -> list[RunningView]:
+        """Controller-facing snapshot of the running set (sorted by the
+        deterministic (dag_id, tao_id) key both vehicles share)."""
+        cap = self._preempt.max_preemptions
+        with self._run_lock:
+            execs = list(self._running_execs.values())
+        views = []
+        for ex in execs:
+            views.append(RunningView.of(
+                ex.tao, self._tenant_of.get(ex.tao.dag_id, "default"),
+                ex.leader, len(ex.members), self._eligible(ex, cap),
+                members=tuple(ex.members)))
+        return sorted_views(views)
+
+    @staticmethod
+    def _eligible(ex: _TaoExec, cap: int) -> bool:
+        """May this execution be displaced?  No yield pending, chunks left
+        for a continuation, at least one chunk claimed *this segment* (the
+        simulator's progress guarantee: a claimed chunk always completes,
+        so no displacement can be zero-progress — this also excludes
+        single-chunk TAOs, matching the sim's n_seg >= 2 rule), and the
+        per-TAO displacement cap not yet reached."""
+        nxt, yld, pre = ex.cursor.snapshot()
+        return (not yld and nxt < ex.cursor.n_chunks
+                and nxt > ex.start_claims and pre < cap)
+
+    def _yield_victims(self, victims) -> None:
+        """Flip the cooperative yield flag on victims still running.
+
+        Eligibility is re-checked under ``_run_lock`` against the exec
+        *currently* registered for the TAO: between the controller's view
+        snapshot and this flip the victim may have finished, or been
+        displaced and re-registered as a new segment — blindly flipping
+        would bypass the preemptible guard and the max_preemptions cap."""
+        if not victims:
+            return
+        cap = self._preempt.max_preemptions
+        with self._run_lock:
+            for v in victims:
+                ex = self._running_execs.get(v.tao)
+                if ex is not None and self._eligible(ex, cap):
+                    ex.cursor.request_yield()
+
+    def _requeue_preempted(self, ex: _TaoExec, worker: int) -> None:
+        """Last member of a yielded execution: repackage the unclaimed
+        chunks as a continuation and requeue through the normal admit
+        path (fresh molding/placement)."""
+        tao, cursor = ex.tao, ex.cursor
+        now_rel = time.perf_counter() - self._t0
+        cursor.rearm()                      # reopen claims + count displacement
+        cursor.preempted_at = now_rel
+        if self._wl_stats is not None:
+            with self._stats_lock:
+                self._trace.append(TraceRecord(
+                    tao.id, tao.type, ex.leader, ex.width,
+                    ex.start_time - self._t0, now_rel, tuple(ex.members),
+                    dag_id=tao.dag_id, preempted=True))
+                st = self._wl_stats.get(tao.dag_id)
+                if st is not None:
+                    st.record_preemption()
+        self.core.release(tao)              # undo admit-time accounting
+        self._enqueue_ready(tao, waker=worker)
 
     def _dpa_distribute(self, tao: TAO, popper: int) -> None:
         """Dynamic Place Allocation: push into members' assembly queues."""
@@ -191,6 +332,13 @@ class ThreadedRuntime:
         tao.assigned_leader = leader
         ex = _TaoExec(tao, leader, width, self.spec.n_workers)
         ex.start_time = time.perf_counter()
+        if self._preempt is not None:
+            with self._run_lock:
+                self._running_execs[tao] = ex
+                # occupancy counts the workers the place actually holds
+                # (members clipped to the pool), not the nominal width —
+                # nominal widths over-report saturation at the pool edge
+                self._occupied_slots += len(ex.members)
         if self._wl_stats is not None:
             st = self._wl_stats.get(tao.dag_id)
             if st is not None:
@@ -198,6 +346,10 @@ class ThreadedRuntime:
                 with self._stats_lock:
                     if rel < st.started:
                         st.started = rel
+                    if ex.cursor.preempted_at is not None:
+                        # RESUME: the continuation reached a place again
+                        st.preemption_delay += rel - ex.cursor.preempted_at
+                        ex.cursor.preempted_at = None
         for m in ex.members:
             with self._alocks[m]:
                 self._assembly[m].append(ex)
@@ -206,24 +358,49 @@ class ThreadedRuntime:
     # ------------------------------------------------------------- worker loop
     def _execute_chunks(self, ex: _TaoExec, worker: int) -> None:
         work: ChunkedWork = ex.tao.work or ChunkedWork(lambda i: None, 1)
+        cursor = ex.cursor
         is_leader = worker == ex.leader
         if is_leader:
             ex.leader_start = time.perf_counter()
         while True:
-            with ex.lock:
-                i = ex.next_chunk
-                if i >= work.n_chunks:
-                    break
-                ex.next_chunk += 1
+            # yield point: claims stop once a controller requested a yield,
+            # so a displaced TAO halts after its in-flight chunks
+            i = cursor.claim()
+            if i is None:
+                break
             work.chunk_fn(i)
+        # Snapshot the yield state BEFORE the member-exit decrement: once
+        # we decrement, the last member may requeue the continuation and
+        # rearm() the cursor, clearing the flag — a non-last leader that
+        # read it afterwards would mistake its partial segment for a full
+        # one and record it into the PTT.
+        nxt, yld, _pre = cursor.snapshot()
+        preempted = yld and nxt < cursor.n_chunks
         # member leaves; the LAST one runs commit-and-wakeup (paper §3.2)
         with ex.lock:
             ex.remaining_members -= 1
             last = ex.remaining_members == 0
-        if is_leader:
+        if is_leader and not preempted:
+            # leader-only PTT record; a preempted segment's elapsed covers
+            # partial work mid-displacement and is skipped.  A
+            # continuation's completing segment records as-is: it
+            # understates a full TAO, but dropping it starves the model
+            # and scaling by the chunk ratio destabilized placement
+            # learning (see the simulator's matching comment) — the bias
+            # is marginal (continuations are rare, capped by
+            # max_preemptions) and policies' ratio signals are unbiased.
             elapsed = time.perf_counter() - ex.leader_start
             self.core.record_time(ex.tao, ex.leader, ex.width, max(elapsed, 1e-9))
         if last:
+            if self._preempt is not None:
+                with self._run_lock:
+                    if self._running_execs.pop(ex.tao, None) is not None:
+                        self._occupied_slots -= len(ex.members)
+            if cursor.yield_requested:
+                if cursor.unclaimed > 0:
+                    self._requeue_preempted(ex, worker)
+                    return
+                cursor.clear_yield()   # yield raced with the final claim
             end_rel = time.perf_counter() - self._t0
             for child in self.core.commit_and_wakeup(ex.tao):
                 self._enqueue_ready(child, waker=worker)
@@ -244,6 +421,9 @@ class ThreadedRuntime:
             st = self._wl_stats.get(tao.dag_id)
             if st is not None:
                 st.record_completion(end_rel)
+                left = self._backlog_ns.get(st.tenant)
+                if left is not None:
+                    self._backlog_ns[st.tenant] = left - 1
                 if st.done:
                     dag_done = st
         # gate feedback outside _stats_lock (gates lock internally; the
@@ -368,6 +548,9 @@ class ThreadedRuntime:
         pending = [(arr.at, i, arr, None) for i, arr in enumerate(arrivals)]
         heapq.heapify(pending)
         seq = itertools.count(len(arrivals))
+        # requests whose pending DELAY was dominance-driven (counted in
+        # _throttled_ns until re-presented); admitter-thread local
+        counted: set[int] = set()
         try:
             while pending:
                 delay = pending[0][0] - (time.perf_counter() - self._t0)
@@ -377,6 +560,10 @@ class ThreadedRuntime:
                     return
                 _, _, arr, req = heapq.heappop(pending)
                 now = time.perf_counter() - self._t0
+                if req is not None and id(req) in counted:
+                    counted.discard(id(req))
+                    with self._stats_lock:
+                        self._throttled_ns[req.tenant] -= 1
                 if gate is not None:
                     if req is None:
                         req = AdmissionRequest(
@@ -386,6 +573,21 @@ class ThreadedRuntime:
                                           self.core.admission_signals())
                     if verdict.action == DELAY:
                         req.attempts += 1
+                        if verdict.dominant:
+                            counted.add(id(req))
+                            with self._stats_lock:
+                                self._throttled_ns[req.tenant] = \
+                                    self._throttled_ns.get(req.tenant, 0) + 1
+                        # preemption consult point 2 (gate feedback): the
+                        # gate throttled this tenant *for dominating the
+                        # backlog* — displace its in-flight work too (a
+                        # tenant delayed for its own degraded p99 is a
+                        # victim, not a cause, and is never forwarded)
+                        if self._preempt is not None and verdict.dominant:
+                            self._yield_victims(self._preempt.on_gate_feedback(
+                                req.tenant, self._running_views(),
+                                self.core.admission_signals(),
+                                self._tenant_backlog()))
                         # strictly-future retry so a zero-quantum gate
                         # cannot spin this thread
                         retry = max(verdict.retry_at, now + 1e-4)
@@ -401,6 +603,8 @@ class ThreadedRuntime:
                     gate.on_admit(req, now)
                 with self._stats_lock:
                     self._wl_stats[arr.dag_id].mark_admitted(now)
+                    self._backlog_ns[arr.tenant] = \
+                        self._backlog_ns.get(arr.tenant, 0) + len(arr.dag)
                 roots = self.core.prepare(arr.dag, dag_id=arr.dag_id)
                 for r in roots:
                     self._enqueue_ready(r, waker=0)
@@ -409,7 +613,7 @@ class ThreadedRuntime:
             self._set_done()
 
     def run_workload(self, workload, timeout_s: float = 600.0,
-                     admission=None):
+                     admission=None, preemption=None):
         """Execute a multi-DAG arrival stream on the live worker pool.
 
         The same contract as :meth:`Simulator.run_workload`: DAGs are
@@ -421,12 +625,22 @@ class ThreadedRuntime:
         the executed trace.  ``admission`` is an optional
         :class:`~repro.core.admission.AdmissionGate` consulted by the
         admitter thread; rejected DAGs appear in the table with
-        ``rejected=True`` and none of their TAOs ever reach a worker."""
+        ``rejected=True`` and none of their TAOs ever reach a worker.
+        ``preemption`` is an optional
+        :class:`~repro.core.preemption.PreemptionController`: victims it
+        names get a cooperative yield flag, stop at their next chunk
+        boundary, and are requeued as continuations (``None`` — the
+        default — never displaces and schedules exactly as before)."""
         from .workload import DagStats, WorkloadResult
         arrivals = workload.arrivals()
         total = workload.total_taos()
         self._begin_run(total)
         self._gate = admission
+        if preemption is not None:
+            preemption.prepare(self.spec)
+            preemption.reset()
+            self._tenant_of = {a.dag_id: a.tenant for a in arrivals}
+        self._preempt = preemption
         stats = {
             a.dag_id: DagStats.for_arrival(a.dag_id, a.name, a.at,
                                            len(a.dag), tenant=a.tenant)

@@ -6,7 +6,11 @@ to observe — the PTT registry, the running-criticality multiset (the "atomic
 variable" of §3.2.1) and the load counters — and performs the wake-up
 transition: parent completes -> child pending-- -> ready -> policy placement.
 It also exports the load snapshot (:meth:`SchedulerCore.admission_signals`)
-that admission gates consult before a DAG's roots ever reach ``admit``.
+that admission gates consult before a DAG's roots ever reach ``admit``,
+and the :meth:`SchedulerCore.release` transition preemption uses: a TAO
+stopped at a chunk boundary leaves the accounting exactly as if it had
+never been admitted, then re-enters through the normal ``admit`` path as
+a continuation (release + admit balance to a no-op on every counter).
 
 Thread-safety contract: one reentrant lock (``_lock``) guards all mutable
 state.  ``admit`` runs the *policy* outside that lock (concurrent wake-ups
@@ -178,24 +182,44 @@ class SchedulerCore:
                 self._in_flight_ns.get(tao.dag_id, 0) + 1
             return Placement(target=target, width=width)
 
+    def _retire_locked(self, tao: TAO) -> None:
+        """Undo ``admit``-time accounting (caller holds ``_lock``): the TAO
+        is no longer ready/running — either it committed, or it was
+        preempted and will be re-admitted as a continuation."""
+        ms = self._crit.get(tao.dag_id)
+        if ms is None:
+            raise KeyError(f"no criticality namespace {tao.dag_id}")
+        ms.remove(tao.criticality)
+        if not ms:
+            # a long-lived stream admits many DAGs; drop drained
+            # namespaces so memory stays bounded by concurrency
+            del self._crit[tao.dag_id]
+        self._in_flight -= 1
+        left = self._in_flight_ns[tao.dag_id] - 1
+        if left:
+            self._in_flight_ns[tao.dag_id] = left
+        else:
+            del self._in_flight_ns[tao.dag_id]
+
+    def release(self, tao: TAO) -> None:
+        """A running TAO was stopped at a chunk boundary (preempted): undo
+        the admit-time accounting WITHOUT counting a completion or waking
+        children.  The vehicle re-admits the continuation through the
+        normal :meth:`admit` path immediately after, so molding is free to
+        choose a fresh (leader, width) and the load/criticality counters
+        stay balanced (release + admit == no net change)."""
+        with self._lock:
+            self._retire_locked(tao)
+            # the continuation is re-placed from scratch: the old place is
+            # meaningless (that is the point of preempting), so the leader
+            # reverts to the not-yet-distributed sentinel
+            tao.assigned_leader = -1
+
     def commit_and_wakeup(self, tao: TAO) -> list[TAO]:
         """Paper §3.2: executed by the last core completing a TAO.  Returns
         the children that became ready (the vehicle then calls ``admit``)."""
         with self._lock:
-            ms = self._crit.get(tao.dag_id)
-            if ms is None:
-                raise KeyError(f"no criticality namespace {tao.dag_id}")
-            ms.remove(tao.criticality)
-            if not ms:
-                # a long-lived stream admits many DAGs; drop drained
-                # namespaces so memory stays bounded by concurrency
-                del self._crit[tao.dag_id]
-            self._in_flight -= 1
-            left = self._in_flight_ns[tao.dag_id] - 1
-            if left:
-                self._in_flight_ns[tao.dag_id] = left
-            else:
-                del self._in_flight_ns[tao.dag_id]
+            self._retire_locked(tao)
             self._completed += 1
             ready = []
             for child in tao.children:

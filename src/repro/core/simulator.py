@@ -37,6 +37,21 @@ discard it without a single TAO reaching a worker.  The same gate protocol
 drives :meth:`repro.core.runtime.ThreadedRuntime.run_workload`, keeping the
 two vehicles comparable on one gated stream.
 
+Preemption: ``run_workload(..., preemption=controller)`` consults a
+:class:`~repro.core.preemption.PreemptionController` when a ready TAO finds
+no slot and on gate DELAY feedback.  A victim gets a **PREEMPT** event at
+its next chunk boundary (boundaries are modeled uniform over the segment's
+water-filled span; at least one chunk per segment completes): the segment
+is truncated there, its members freed and their un-run busy time returned,
+the TAO's :class:`~repro.core.preemption.ChunkCursor` advanced to the
+boundary, and a same-timestamp **RESUME** event (seq-ordered after the
+freed members re-dispatch — the deterministic tie-break) re-admits the
+continuation through ``SchedulerCore.release`` + the normal ``admit``
+path, with molding free to choose a new (leader, width).  A preempted
+segment's COMPLETE event is stale and skipped; with ``preemption=None``
+(default) no cursor is ever created and schedules are byte-identical to
+the pre-preemption behavior.
+
 Thread-safety contract: the simulator is strictly single-threaded — one
 event loop mutates all state (queues, free times, interference counters,
 DagStats) without locks; only the shared ``SchedulerCore``/PTT objects it
@@ -54,6 +69,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import math
 import random
 from collections import deque
 from typing import Callable
@@ -61,6 +77,7 @@ from typing import Callable
 from .dag import TAO, TaoDag
 from .places import BIG, LITTLE, ClusterSpec, leader_of, place_members
 from .policies import Policy
+from .preemption import RunningView, ensure_cursor, sorted_views
 from .scheduler import SchedulerCore
 
 
@@ -135,6 +152,25 @@ class TraceRecord:
     end: float
     participants: tuple
     dag_id: int = 0     # which admitted DAG (0 = legacy single-DAG runs)
+    # True for a segment truncated at a chunk boundary by preemption; the
+    # TAO's remaining chunks appear as later records with the same tao_id
+    preempted: bool = False
+
+
+@dataclasses.dataclass
+class _Segment:
+    """Per-segment bookkeeping a preemption-enabled run keeps for every
+    running TAO (absent entirely when ``preemption=None``)."""
+
+    rec: TraceRecord
+    t_begin: float            # earliest member join (work actually starts)
+    t_end: float              # water-filled completion
+    joins: dict               # chosen member -> join time
+    n_seg: int                # chunks this segment covers
+    chunks_done: int = 0      # boundary a scheduled PREEMPT stops at
+    preempt_at: float | None = None
+    beneficiary: TAO | None = None   # queued TAO the displacement is for
+    ben_target: int = -1             # the queue the beneficiary waits in
 
 
 _CHUNK = 0xFFFFFFFFFFFFFFFF          # 64-bit window for k-th-bit selection
@@ -301,35 +337,41 @@ class Simulator:
 
     # -- main entry -----------------------------------------------------------
     def run(self, dag, max_events: int | None = None,
-            admission=None) -> SimResult:
+            admission=None, preemption=None) -> SimResult:
         """Execute one DAG (offline, arrival at t=0) or a whole ``Workload``
         stream (online arrivals).  Returns a ``WorkloadResult`` (a
         ``SimResult`` subclass) either way; workload runs carry the per-DAG
         latency table in ``result.per_dag``.
 
         ``max_events`` bounds *all* processed events — TAO completions plus
-        one arrival/gate-retry event per DAG — so budget ``n_taos + n_dags``
-        (plus expected gate re-evaluations) when sizing it exactly."""
+        one arrival/gate-retry event per DAG, plus one PREEMPT + one RESUME
+        per displacement — so budget ``n_taos + n_dags`` (plus expected
+        gate re-evaluations and preemptions) when sizing it exactly."""
         from .workload import Workload
         if isinstance(dag, Workload):
             return self.run_workload(dag, max_events=max_events,
-                                     admission=admission)
+                                     admission=admission,
+                                     preemption=preemption)
         return self._execute([(0.0, 0, dag, "", "default")], max_events,
-                             admission)
+                             admission, preemption)
 
     def run_workload(self, workload, max_events: int | None = None,
-                     admission=None):
+                     admission=None, preemption=None):
         """Execute a multi-DAG arrival stream on the shared pool.
 
         ``admission`` is an optional
         :class:`~repro.core.admission.AdmissionGate`; ``None`` (default)
         admits everything immediately, byte-identically to the pre-gate
-        behavior."""
+        behavior.  ``preemption`` is an optional
+        :class:`~repro.core.preemption.PreemptionController`; ``None``
+        (default) never displaces running work and schedules
+        byte-identically to the pre-preemption behavior."""
         arrivals = [(a.at, a.dag_id, a.dag, a.name, a.tenant)
                     for a in workload.arrivals()]
-        return self._execute(arrivals, max_events, admission)
+        return self._execute(arrivals, max_events, admission, preemption)
 
-    def _execute(self, arrivals: list, max_events: int | None, gate=None):
+    def _execute(self, arrivals: list, max_events: int | None, gate=None,
+                 ctrl=None):
         from .admission import DELAY, REJECT, AdmissionRequest
         from .workload import DagStats, WorkloadResult
         # per-run counter reset: a reused Simulator must not report the
@@ -354,7 +396,7 @@ class Simulator:
         run_clusters: dict[TAO, frozenset] = {}
         busy_acc = 0.0
 
-        ARRIVE, COMPLETE = 0, 1
+        ARRIVE, COMPLETE, PREEMPT, RESUME = 0, 1, 2, 3
         events: list = []   # (time, seq, kind, payload)
         seq = itertools.count()
         now = 0.0
@@ -362,6 +404,18 @@ class Simulator:
         stats: dict[int, DagStats] = {}
         # running streaming / same-type counters per cluster for interference
         running: dict[TAO, TraceRecord] = {}
+        # preemption-only state: per-running-TAO segment bookkeeping, the
+        # width sum of running segments (the wants_consult pre-gate) and
+        # the dag_id -> tenant map controller verdicts are keyed on
+        run_info: dict[TAO, _Segment] = {}
+        occupied_slots = 0
+        backlog_ns: dict[str, int] = {}   # tenant -> admitted-not-done TAOs
+        throttled_ns: dict[str, int] = {}  # tenant -> pending dominance delays
+        counted: set[int] = set()          # id(req) of counted delays
+        tenant_of = {dag_id: tenant for _, dag_id, _, _, tenant in arrivals}
+        if ctrl is not None:
+            ctrl.prepare(self.spec)
+            ctrl.reset()
 
         # ARRIVE payload: (dag_id, dag, name, tenant, request) — request is
         # None until the gate first sees the DAG, then carries attempt count
@@ -396,7 +450,7 @@ class Simulator:
             return tao
 
         def start_tao(tao: TAO, popper: int, t0: float) -> None:
-            nonlocal busy_acc
+            nonlocal busy_acc, occupied_slots
             model = self.models[tao.type]
             width = tao.assigned_width
             leader = leader_of(popper, width)
@@ -441,6 +495,12 @@ class Simulator:
             # payload types (ChunkedWork etc.) mean "unit work" here.
             scale = tao.work if isinstance(tao.work, (int, float)) else 1.0
             work = model.t_ref * float(scale)
+            # a preempted TAO's continuation only carries its unclaimed
+            # chunks (cursor exists only under a preemption controller, so
+            # the arithmetic is untouched otherwise)
+            cursor = tao.cursor
+            if cursor is not None and cursor.next_chunk:
+                work *= cursor.remaining_fraction
             t_end = float("inf")
             chosen: list[int] = []
             # single incremental prefix-sum pass: the k-candidate loop used
@@ -488,7 +548,24 @@ class Simulator:
             st = stats.get(tao.dag_id)
             if st is not None and t0 < st.started:
                 st.started = t0
-            heapq.heappush(events, (t_end, next(seq), COMPLETE, tao))
+            if ctrl is not None:
+                cursor = ensure_cursor(tao)
+                if cursor.preempted_at is not None:
+                    # RESUME accounting: the continuation holds a place again
+                    if st is not None:
+                        st.preemption_delay += t0 - cursor.preempted_at
+                    cursor.preempted_at = None
+                run_info[tao] = _Segment(
+                    rec=rec, t_begin=joins[chosen[0]], t_end=t_end,
+                    joins={m: joins[m] for m in chosen},
+                    n_seg=cursor.unclaimed)
+                # occupancy counts the workers actually held (chosen
+                # members), not the nominal width, which over-reports
+                # saturation at the pool edge / around failed workers
+                occupied_slots += len(rec.participants)
+            # payload carries the segment's record so a COMPLETE that was
+            # overtaken by a PREEMPT is recognizably stale
+            heapq.heappush(events, (t_end, next(seq), COMPLETE, (tao, rec)))
 
         def dispatch_from(worker: int, t0: float) -> bool:
             """Worker tries local pop then one random steal (paper §5)."""
@@ -510,6 +587,80 @@ class Simulator:
                 return True
             return False
 
+        def gate_throttled() -> frozenset | None:
+            """Tenants the gate currently holds at the door for
+            *dominating* the backlog; ``None`` on ungated runs."""
+            if gate is None:
+                return None
+            return frozenset(t for t, c in throttled_ns.items() if c > 0)
+
+        def tenant_backlog() -> dict:
+            """Per-tenant admitted-but-uncompleted TAO counts — the
+            SLO-dominance signal controllers measure against (the tenant
+            split of the slo-adaptive gate's backlog).  ``backlog_ns`` is
+            maintained incrementally (admission adds ``n_taos``, every
+            commit subtracts one), so the consult path never scans the
+            per-DAG stats table."""
+            return dict(backlog_ns)
+
+        def running_views() -> list:
+            """Controller-facing snapshot of the running set (sorted by
+            the deterministic (dag_id, tao_id) key both vehicles share)."""
+            cap = ctrl.max_preemptions
+            views = []
+            for tao2, seg in run_info.items():
+                c = tao2.cursor
+                preemptible = (seg.preempt_at is None and seg.n_seg >= 2
+                               and c.preemptions < cap)
+                views.append(RunningView.of(
+                    tao2, tenant_of.get(tao2.dag_id, "default"),
+                    seg.rec.leader, len(seg.rec.participants), preemptible,
+                    members=seg.rec.participants))
+            return sorted_views(views)
+
+        def schedule_preempt(view, t_req: float, beneficiary: TAO | None = None,
+                             ben_target: int = -1) -> None:
+            """Stop ``view``'s TAO at its next chunk boundary >= t_req.
+
+            Boundaries are modeled uniform over the segment's water-filled
+            span; at least one chunk of every segment completes, so a
+            repeatedly displaced TAO still makes progress.  ``beneficiary``
+            (the queued TAO the displacement is for) gets the freed slot
+            handed to it directly at truncation time if it is still
+            waiting in queue ``ben_target``."""
+            tao2 = view.tao
+            seg = run_info.get(tao2)
+            if seg is None or seg.preempt_at is not None:
+                return
+            span = seg.t_end - seg.t_begin
+            if seg.n_seg < 2 or span <= 0:
+                return
+            frac = (t_req - seg.t_begin) / span
+            j = max(1, math.ceil(frac * seg.n_seg - 1e-9))
+            if j >= seg.n_seg:
+                return            # past the last boundary: completes anyway
+            t_p = seg.t_begin + span * j / seg.n_seg
+            if t_p < t_req:
+                t_p = t_req       # float guard: never truncate in the past
+            seg.preempt_at = t_p
+            seg.chunks_done = j
+            seg.beneficiary = beneficiary
+            seg.ben_target = ben_target
+            heapq.heappush(events, (t_p, next(seq), PREEMPT, (tao2, seg)))
+
+        def take_from_queue(tao2: TAO, target: int) -> bool:
+            """Remove a still-queued TAO for a targeted hand-off."""
+            if target < 0:
+                return False
+            q = queues[target]
+            try:
+                q.remove(tao2)
+            except ValueError:
+                return False
+            if fast and not q:
+                nonempty.discard(target)
+            return True
+
         def enqueue_ready(tao: TAO, waker: int, t0: float) -> None:
             placement = self.core.admit(tao, waker)
             push_queue(placement.target, tao)
@@ -523,6 +674,22 @@ class Simulator:
                 if free_time[w] <= t0 + 1e-12:
                     idle.discard(w)
                     dispatch_from(w, t0)
+            # preemption consult point 1: the TAO stayed queued (start_tao
+            # would have stamped assigned_leader) and may displace running
+            # work at the controller's discretion; it is the beneficiary of
+            # whatever slot the displacement frees.  The wants_consult
+            # pre-gate keeps the unsaturated hot path from materializing
+            # views/backlog on every enqueue.
+            if ctrl is not None and tao.assigned_leader == -1:
+                signals = self.core.admission_signals()
+                if ctrl.wants_consult(signals, occupied_slots):
+                    victims = ctrl.on_ready(
+                        tao, tenant_of.get(tao.dag_id, "default"),
+                        running_views(), signals, tenant_backlog(),
+                        gate_throttled())
+                    for v in victims:
+                        schedule_preempt(v, t0, beneficiary=tao,
+                                         ben_target=placement.target)
 
         n_events = 0
         while events:
@@ -539,6 +706,11 @@ class Simulator:
                     stats[dag_id] = st
                 # empty DAGs bypass the gate (done on arrival, consume
                 # nothing); everything else asks admit/delay/reject
+                if req is not None and id(req) in counted:
+                    # the delayed arrival is being re-presented: it no
+                    # longer counts as held-at-the-door
+                    counted.discard(id(req))
+                    throttled_ns[tenant] -= 1
                 if gate is not None and len(dag) > 0:
                     if req is None:
                         req = AdmissionRequest(dag_id=dag_id, tenant=tenant,
@@ -547,6 +719,21 @@ class Simulator:
                                           self.core.admission_signals())
                     if verdict.action == DELAY:
                         req.attempts += 1
+                        if verdict.dominant:
+                            counted.add(id(req))
+                            throttled_ns[tenant] = \
+                                throttled_ns.get(tenant, 0) + 1
+                        # preemption consult point 2 (gate feedback): the
+                        # gate throttled this tenant *for dominating the
+                        # backlog* — displace its in-flight work too (a
+                        # tenant delayed for its own degraded p99 is a
+                        # victim, not a cause, and is never forwarded)
+                        if ctrl is not None and verdict.dominant:
+                            for v in ctrl.on_gate_feedback(
+                                    tenant, running_views(),
+                                    self.core.admission_signals(),
+                                    tenant_backlog()):
+                                schedule_preempt(v, now)
                         # strictly-future retry: a gate bug must surface as
                         # max_events, not an infinite same-time loop
                         retry = max(verdict.retry_at, now + 1e-9)
@@ -560,15 +747,87 @@ class Simulator:
                         continue
                     gate.on_admit(req, now)
                 st.mark_admitted(now)
+                if ctrl is not None:
+                    backlog_ns[tenant] = backlog_ns.get(tenant, 0) + len(dag)
                 roots = self.core.prepare(dag, dag_id=dag_id)
                 for r in roots:
                     enqueue_ready(r, waker=0, t0=now)
                 continue
-            tao = payload
-            rec = running.pop(tao)
+            if kind == PREEMPT:
+                tao, seg = payload
+                if running.get(tao) is not seg.rec:
+                    continue    # the segment completed first: nothing to stop
+                rec = seg.rec
+                running.pop(tao)
+                run_info.pop(tao, None)
+                occupied_slots -= len(rec.participants)
+                if fast:
+                    interference.finish(tao.type, run_clusters.pop(tao))
+                # truncate at the chunk boundary: members are freed now and
+                # their un-run busy time returned (a member whose join lay
+                # past the boundary never ran this segment at all)
+                for m in rec.participants:
+                    new_free = max(seg.joins[m], now)
+                    busy_acc -= seg.t_end - new_free
+                    free_time[m] = new_free
+                rec.end = now
+                rec.preempted = True
+                cursor = ensure_cursor(tao)
+                cursor.advance(seg.chunks_done)
+                cursor.rearm()
+                cursor.preempted_at = now
+                st = stats.get(tao.dag_id)
+                if st is not None:
+                    st.record_preemption()
+                # targeted hand-off: the ready TAO this displacement was
+                # for takes the freed slot directly if it is still queued
+                # (random stealing would likely hand the slot right back to
+                # the dominant tenant's plentiful queued TAOs)
+                ben = seg.beneficiary
+                freed = [m for m in rec.participants
+                         if free_time[m] <= now + 1e-12
+                         and m not in self.failed]
+                if (ben is not None and freed and ben.assigned_leader == -1
+                        and take_from_queue(ben, seg.ben_target)):
+                    popper = rec.leader if rec.leader in freed else freed[0]
+                    start_tao(ben, popper, now)
+                # the continuation re-enters via its own RESUME event at the
+                # same timestamp: freed members re-dispatch first (seq order
+                # is the deterministic tie-break), then the unclaimed chunks
+                # go back through the normal release->admit path
+                heapq.heappush(events, (now, next(seq), RESUME,
+                                        (tao, rec.leader)))
+                for m in rec.participants:
+                    if free_time[m] <= now + 1e-12 and m not in self.failed:
+                        if not dispatch_from(m, now):
+                            idle.add(m)
+                continue
+            if kind == RESUME:
+                tao, old_leader = payload
+                self.core.release(tao)
+                enqueue_ready(tao, waker=old_leader, t0=now)
+                continue
+            tao, rec = payload
+            if running.get(tao) is not rec:
+                continue        # stale COMPLETE: this segment was preempted
+            running.pop(tao)
+            seg = run_info.pop(tao, None)
             if fast:
                 interference.finish(tao.type, run_clusters.pop(tao))
-            # leader-only PTT record: leader's elapsed view
+            if ctrl is not None:
+                # the whole segment ran: all its chunks are spent
+                cursor = ensure_cursor(tao)
+                cursor.advance(cursor.n_chunks)
+                occupied_slots -= len(rec.participants)
+            # leader-only PTT record: leader's elapsed view.  Preempted
+            # segments never record (their truncated end is a displacement
+            # artifact, not a sample); a continuation's completing segment
+            # records its elapsed as-is — it understates a full TAO, but
+            # both alternatives evaluated worse: dropping it starves the
+            # model, and scaling it up by the chunk ratio destabilized
+            # placement learning on the bursty A/B (continuations are
+            # rare and bounded by max_preemptions, so the EWMA bias is
+            # marginal while the ratio signals policies use are unbiased).
             if rec.leader in rec.participants:
                 elapsed = rec.end - max(rec.start, 0.0)
                 self.core.record_time(tao, rec.leader, rec.width, elapsed)
@@ -578,6 +837,8 @@ class Simulator:
             st = stats.get(tao.dag_id)
             if st is not None:
                 st.record_completion(now)
+                if ctrl is not None:
+                    backlog_ns[st.tenant] = backlog_ns.get(st.tenant, 0) - 1
                 if gate is not None and st.done:
                     # feedback signal for adaptive gates (sojourn EWMAs)
                     gate.on_dag_done(st.tenant, st.sojourn, now,

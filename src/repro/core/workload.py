@@ -27,6 +27,14 @@ timestamp) from *admitted* (when the gate let the DAG in) and records
 ``rejected`` outcomes; ``WorkloadResult`` aggregates goodput and
 per-tenant SLO attainment on top of the sojourn percentiles.
 
+Preemption: a :class:`~repro.core.preemption.PreemptionController` may
+displace a DAG's *running* TAOs at chunk boundaries.  ``DagStats`` keeps
+the per-DAG ledger (``preempted_count`` displacements,
+``preemption_delay`` total stop->resume gap) and ``WorkloadResult``
+exposes the fairness surface on top (``n_preemptions``,
+``preemptions_by_tenant`` — who actually got stopped for whom,
+``mean_preemption_delay``).
+
 This module holds only data/aggregation; execution is vehicle-agnostic —
 :meth:`repro.core.simulator.Simulator.run_workload` replays the stream in
 virtual time, :meth:`repro.core.runtime.ThreadedRuntime.run_workload`
@@ -146,6 +154,11 @@ class DagStats:
     tenant: str = "default"
     admitted: float = float("nan")   # when the admission gate let it in
     rejected: bool = False           # gate dropped it; never executed
+    # chunk-granularity preemption accounting (repro.core.preemption):
+    # displacements of this DAG's running TAOs, and the total stop->resume
+    # gap its continuations spent waiting to be re-placed
+    preempted_count: int = 0
+    preemption_delay: float = 0.0
 
     @classmethod
     def for_arrival(cls, dag_id: int, name: str, arrival: float,
@@ -171,6 +184,12 @@ class DagStats:
     def mark_rejected(self) -> None:
         """The admission gate dropped this DAG; it will never execute."""
         self.rejected = True
+
+    def record_preemption(self) -> None:
+        """One of this DAG's running TAOs was stopped at a chunk boundary
+        (its continuation is being re-admitted); both vehicles call this
+        at the moment the displacement takes effect."""
+        self.preempted_count += 1
 
     def record_completion(self, t: float) -> None:
         """One TAO of this DAG committed at time ``t``; the last one stamps
@@ -282,11 +301,36 @@ class WorkloadResult(SimResult):
         return sum(ds) / len(ds) if ds else float("nan")
 
     def per_tenant(self) -> dict:
-        """``tenant -> [DagStats]`` grouping, in dag_id order."""
+        """``tenant -> [DagStats]`` grouping, in dag_id order.
+
+        Each ``DagStats`` row carries its preemption ledger
+        (``preempted_count`` / ``preemption_delay``), so per-tenant
+        *displacement fairness* — who actually got stopped for whom — is
+        readable straight off this grouping; ``preemptions_by_tenant``
+        is the one-number-per-tenant summary of the same data."""
         out: dict[str, list] = {}
         for _, st in sorted(self.per_dag.items()):
             out.setdefault(st.tenant, []).append(st)
         return out
+
+    # -- preemption accounting ----------------------------------------------
+    @property
+    def n_preemptions(self) -> int:
+        """Total chunk-boundary displacements across the whole run."""
+        return sum(s.preempted_count for s in self.per_dag.values())
+
+    def preemptions_by_tenant(self) -> dict:
+        """``tenant -> displacement count`` — the fairness surface benches
+        assert on (e.g. the steady tenant is never the victim)."""
+        return {tenant: sum(s.preempted_count for s in stats)
+                for tenant, stats in self.per_tenant().items()}
+
+    def mean_preemption_delay(self) -> float:
+        """Mean stop->resume gap per displacement (nan when none)."""
+        n = self.n_preemptions
+        if n == 0:
+            return float("nan")
+        return sum(s.preemption_delay for s in self.per_dag.values()) / n
 
     def goodput(self, slo) -> int:
         """Completed DAGs whose sojourn met their SLO (the admission
@@ -319,6 +363,8 @@ class WorkloadResult(SimResult):
 
     def __repr__(self) -> str:
         rej = f", rejected={self.n_rejected}" if self.n_rejected else ""
+        if self.n_preemptions:
+            rej += f", preemptions={self.n_preemptions}"
         return (f"WorkloadResult(dags={len(self.per_dag)}, "
                 f"makespan={self.makespan:.4f}s, "
                 f"p50={self.sojourn_p50():.4f}s, "
