@@ -14,7 +14,10 @@ figure's own metric, e.g. TAOs/s for Fig 6).
            `--preemption {none,backlog,critical-boost}` (composing with
            `--admission`) A/Bs chunk-granularity preemption of running
            TAOs on the same bursty stream.
-  serve  — serving orchestrator (beyond-paper: prefill/decode placement).
+  serve  — serving on the multi-tenant engine: policy sweep + bursty
+           two-tenant admission x preemption A/B on both vehicles (sim with
+           calibrated models, threaded with real zoo kernels); writes the
+           JSON report to `--out` (default benchmarks/BENCH_serve.json).
   train  — training-DAG orchestrator at fleet scale.
   roofline — per (arch x shape) roofline terms from the dry-run artifacts
              (see EXPERIMENTS.md §Roofline; requires experiments/dryrun/).
@@ -375,20 +378,138 @@ def preemption_bench(vehicle: str = "sim", gate: str = "slo-adaptive",
 # ---------------------------------------------------------------------------
 # beyond-paper: serving + training orchestrators
 # ---------------------------------------------------------------------------
-def serve_bench() -> None:
-    import random as _r
-    from repro.core import fleet, hikey960, make_policy
-    from repro.core.serve_orchestrator import ServeRequest, simulate_serving
+SERVE_SLO = {"steady": 0.25, "burst": 1.5}   # per-tenant sojourn targets (s)
 
-    rng = _r.Random(0)
-    reqs = [ServeRequest(i, rng.choice([512, 2048, 8192]),
-                         rng.choice([64, 128, 256])) for i in range(200)]
-    for spec_name, spec in (("hikey", hikey960()), ("fleet64", fleet(32, 32))):
-        for pol in ("homogeneous", "weight", "molding:weight"):
-            st = simulate_serving(reqs, spec, make_policy(pol), seed=0)
-            emit(f"serve.{spec_name}.{pol}",
-                 st.mean_latency * 1e6,
-                 f"{st.tokens_per_s:.0f}tok/s;p99={st.p99_latency:.3f}s")
+
+def _serve_stats_row(st, slo) -> dict:
+    """One A/B cell of the serving report (both vehicles share this shape)."""
+    res = st.result
+    return {
+        "makespan_s": round(st.makespan, 6),
+        "completed_requests": len(st.latencies),
+        "rejected_requests": res.n_rejected,
+        "tokens_per_s": round(st.tokens_per_s, 1),
+        "tokens_per_s_by_tenant": {t: round(v, 1) for t, v in
+                                   sorted(st.tokens_per_s_by_tenant.items())},
+        "mean_sojourn_s": round(st.mean_latency, 6),
+        "p99_sojourn_s": round(st.p99_latency, 6),
+        "p99_sojourn_by_tenant": {t: round(v, 6) for t, v in
+                                  sorted(st.p99_by_tenant().items())},
+        "goodput": res.goodput(slo),
+        "preemptions_by_tenant": {t: int(v) for t, v in
+                                  sorted(res.preemptions_by_tenant().items())},
+        "ptt_profiles": {typ: {"cells": len(cells),
+                               "min_ms": round(min(cells.values()) * 1e3, 4),
+                               "max_ms": round(max(cells.values()) * 1e3, 4)}
+                         for typ, cells in sorted(st.ptt_profiles.items())
+                         if cells},
+    }
+
+
+def serve_bench(vehicle: str = "both", admission: str = "token-bucket",
+                preemption: str = "critical-boost",
+                out: str = "benchmarks/BENCH_serve.json") -> None:
+    """Serving on the multi-tenant engine: policy sweep + the bursty
+    two-tenant admission x preemption A/B, on both execution vehicles.
+
+    The simulator leg replays a bursty request trace
+    (``bursty_serving_trace``) against the calibrated serve-phase kernel
+    models; the threaded leg runs a scaled-down trace with *real jitted
+    kernels* from the tenant zoo (transformer flavor for the steady tenant,
+    raw Pallas-class kernels for the burst tenant), so its PTT columns are
+    measured wall-clock times.  Four configurations each — {no gate, gate} x
+    {no preemption, controller} — land in ``out`` (BENCH_serve.json) with
+    per-tenant p99 sojourn, token throughput and goodput.
+    """
+    from repro.core import hikey960, make_gate, make_policy, make_preemption
+    from repro.core.serve_orchestrator import (bursty_serving_trace,
+                                               simulate_serving)
+
+    spec = hikey960()
+    slo = SERVE_SLO
+    combos = [("none", "none"), (admission, "none"), ("none", preemption),
+              (admission, preemption)]
+    report = {
+        "spec": "hikey960 (4 big + 4 LITTLE)",
+        "slo_s": slo,
+        "combos": [f"{g}+{c}" for g, c in combos],
+        "policy_sweep": {},
+        "ab": {"sim": {}, "threaded": {}},
+    }
+
+    # -- policy sweep (sim): does the learned placement still pay off? -----
+    sweep_reqs = bursty_serving_trace(seed=0)
+    for pol in ("homogeneous", "weight", "molding:weight"):
+        st = simulate_serving(sweep_reqs, spec, make_policy(pol), seed=0)
+        emit(f"serve.policy.{pol}", st.mean_latency * 1e6,
+             f"{st.tokens_per_s:.0f}tok/s;p99={st.p99_latency:.3f}s")
+        report["policy_sweep"][pol] = _serve_stats_row(st, slo)
+
+    def gate_for(name, threaded):
+        if name == "none":
+            return None
+        kw = {
+            "token-bucket": dict(rate=40.0 if threaded else 60.0, burst=6,
+                                 max_delay=0.5),
+            "slo-adaptive": dict(slo=slo["steady"],
+                                 slo_per_tenant={"burst": slo["burst"]},
+                                 headroom=8.0),
+        }.get(name, {})
+        return make_gate(name, **kw)
+
+    # -- A/B, simulator leg (calibrated kernel models, chunked prefill) ----
+    if vehicle in ("sim", "both"):
+        for gate_name, ctrl_name in combos:
+            reqs = bursty_serving_trace(seed=1)
+            st = simulate_serving(
+                reqs, spec, make_policy("molding:weight"), seed=1,
+                n_chunks=4,
+                admission=gate_for(gate_name, threaded=False),
+                preemption=(make_preemption(ctrl_name)
+                            if ctrl_name != "none" else None))
+            row = _serve_stats_row(st, slo)
+            report["ab"]["sim"][f"{gate_name}+{ctrl_name}"] = row
+            for tenant, p99 in sorted(st.p99_by_tenant().items()):
+                emit(f"serve.ab.sim.{gate_name}+{ctrl_name}.{tenant}",
+                     p99 * 1e6,
+                     f"p99={p99:.4f}s;"
+                     f"tok/s={st.tokens_per_s_by_tenant.get(tenant, 0):.0f};"
+                     f"goodput={row['goodput']}")
+
+    # -- A/B, threaded leg (real jitted kernels from the tenant zoo) -------
+    if vehicle in ("threaded", "both"):
+        from repro.core.serve_orchestrator import run_serving_workload_threaded
+        from repro.launch.zoo import default_zoo, warm_zoo, zoo_binder
+
+        zoo = default_zoo(slab_tokens=1024)
+        warm_zoo(zoo)     # compile off the worker threads
+        for gate_name, ctrl_name in combos:
+            # scaled-down trace: real wall-clock arrivals + kernel times
+            reqs = bursty_serving_trace(
+                n_steady=10, steady_rate=30.0, n_burst=14, burst_at=0.15,
+                burst_rate=300.0, steady_prompts=(512, 1024),
+                steady_gens=(64,), burst_prompts=(2048, 4096),
+                burst_gens=(64, 128), seed=1)
+            st = run_serving_workload_threaded(
+                reqs, spec, make_policy("molding:weight"), zoo_binder(zoo),
+                seed=1, timeout_s=120.0,
+                admission=gate_for(gate_name, threaded=True),
+                preemption=(make_preemption(ctrl_name)
+                            if ctrl_name != "none" else None))
+            row = _serve_stats_row(st, slo)
+            report["ab"]["threaded"][f"{gate_name}+{ctrl_name}"] = row
+            for tenant, p99 in sorted(st.p99_by_tenant().items()):
+                emit(f"serve.ab.threaded.{gate_name}+{ctrl_name}.{tenant}",
+                     p99 * 1e6,
+                     f"p99={p99:.4f}s;"
+                     f"tok/s={st.tokens_per_s_by_tenant.get(tenant, 0):.0f};"
+                     f"goodput={row['goodput']}")
+
+    if out:
+        path = pathlib.Path(out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"# serve report -> {path}", flush=True)
 
 
 def train_bench() -> None:
@@ -459,8 +580,10 @@ def main() -> None:
     args = sys.argv[1:]
     selected: list[str] = []
     vehicle = "sim"
+    vehicle_set = False       # serve defaults to both vehicles unless set
     admission = "none"
     preemption = "none"
+    out = None                # --out: serve report path override
     i = 0
     while i < len(args):
         if args[i] == "--workload":
@@ -475,8 +598,17 @@ def main() -> None:
             if i >= len(args):
                 sys.exit("--vehicle needs a value (sim or threaded)")
             vehicle = args[i]
+            vehicle_set = True
         elif args[i].startswith("--vehicle="):
             vehicle = args[i].split("=", 1)[1]
+            vehicle_set = True
+        elif args[i] == "--out":
+            i += 1
+            if i >= len(args):
+                sys.exit("--out needs a path (e.g. --out /tmp/serve.json)")
+            out = args[i]
+        elif args[i].startswith("--out="):
+            out = args[i].split("=", 1)[1]
         elif args[i] == "--admission":
             i += 1
             if i >= len(args):
@@ -532,7 +664,14 @@ def main() -> None:
         else:
             admission_bench(vehicle=vehicle, gate=admission)
     if sel("serve"):
-        serve_bench()
+        # serve A/Bs both vehicles unless --vehicle narrows it; the gate /
+        # controller default to the acceptance pair when not overridden
+        serve_bench(vehicle=vehicle if vehicle_set else "both",
+                    admission=(admission if admission != "none"
+                               else "token-bucket"),
+                    preemption=(preemption if preemption != "none"
+                                else "critical-boost"),
+                    out=out or "benchmarks/BENCH_serve.json")
     if sel("train"):
         train_bench()
     if sel("roofline"):

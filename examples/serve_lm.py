@@ -43,14 +43,21 @@ def main() -> None:
     _, cache = prefill_j(params, {"tokens": toks})     # warm compile
     decode_j(params, toks[:, -1:], cache)
 
-    small = [ServeRequest(i, 512, 64) for i in range(8)]
+    small = [ServeRequest(i, 512, 64, arrival=0.02 * i) for i in range(8)]
     out = run_serving_threaded(
         small, hikey960(), make_policy("molding:weight"),
-        prefill_fn=lambda r: prefill_j(params, {"tokens": toks}),
-        decode_fn=lambda r, i: decode_j(params, toks[:, -1:], cache))
+        prefill_fn=lambda r: jax.block_until_ready(
+            prefill_j(params, {"tokens": toks})[0]),
+        decode_fn=lambda r, i: jax.block_until_ready(
+            decode_j(params, toks[:, -1:], cache)[0]))
     print(f"\n=== real model on the threaded runtime ===\n"
-          f"  {out['completed']} TAOs in {out['elapsed_s']:.2f}s "
-          f"({out['tokens_per_s']:.0f} scheduler-tokens/s)")
+          f"  {out.result.completed} TAOs in {out.makespan:.2f}s "
+          f"({out.tokens_per_s:.0f} tok/s, p99 sojourn "
+          f"{out.p99_latency * 1e3:.1f} ms)")
+    for typ, cells in sorted(out.ptt_profiles.items()):
+        if cells:
+            print(f"  measured PTT[{typ}]: {len(cells)} cells, fastest "
+                  f"{min(cells.values()) * 1e3:.2f} ms")
 
 
 if __name__ == "__main__":

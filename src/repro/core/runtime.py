@@ -605,6 +605,11 @@ class ThreadedRuntime:
                     self._wl_stats[arr.dag_id].mark_admitted(now)
                     self._backlog_ns[arr.tenant] = \
                         self._backlog_ns.get(arr.tenant, 0) + len(arr.dag)
+                # deferred payload binding: materialize real ChunkedWork
+                # closures only for DAGs that actually got in (rejected
+                # arrivals never reach this point, so never pay for them)
+                if arr.bind is not None:
+                    arr.bind(arr.dag)
                 roots = self.core.prepare(arr.dag, dag_id=arr.dag_id)
                 for r in roots:
                     self._enqueue_ready(r, waker=0)
@@ -643,7 +648,8 @@ class ThreadedRuntime:
         self._preempt = preemption
         stats = {
             a.dag_id: DagStats.for_arrival(a.dag_id, a.name, a.at,
-                                           len(a.dag), tenant=a.tenant)
+                                           len(a.dag), tenant=a.tenant,
+                                           tokens=a.tokens)
             for a in arrivals
         }
         self._wl_stats = stats

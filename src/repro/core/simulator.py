@@ -352,8 +352,8 @@ class Simulator:
             return self.run_workload(dag, max_events=max_events,
                                      admission=admission,
                                      preemption=preemption)
-        return self._execute([(0.0, 0, dag, "", "default")], max_events,
-                             admission, preemption)
+        return self._execute([(0.0, 0, dag, "", "default", 0.0, None)],
+                             max_events, admission, preemption)
 
     def run_workload(self, workload, max_events: int | None = None,
                      admission=None, preemption=None):
@@ -366,7 +366,8 @@ class Simulator:
         :class:`~repro.core.preemption.PreemptionController`; ``None``
         (default) never displaces running work and schedules
         byte-identically to the pre-preemption behavior."""
-        arrivals = [(a.at, a.dag_id, a.dag, a.name, a.tenant)
+        arrivals = [(a.at, a.dag_id, a.dag, a.name, a.tenant, a.tokens,
+                     a.bind)
                     for a in workload.arrivals()]
         return self._execute(arrivals, max_events, admission, preemption)
 
@@ -412,17 +413,19 @@ class Simulator:
         backlog_ns: dict[str, int] = {}   # tenant -> admitted-not-done TAOs
         throttled_ns: dict[str, int] = {}  # tenant -> pending dominance delays
         counted: set[int] = set()          # id(req) of counted delays
-        tenant_of = {dag_id: tenant for _, dag_id, _, _, tenant in arrivals}
+        tenant_of = {dag_id: tenant
+                     for _, dag_id, _, _, tenant, _, _ in arrivals}
         if ctrl is not None:
             ctrl.prepare(self.spec)
             ctrl.reset()
 
-        # ARRIVE payload: (dag_id, dag, name, tenant, request) — request is
-        # None until the gate first sees the DAG, then carries attempt count
-        for at, dag_id, dag, name, tenant in arrivals:
+        # ARRIVE payload: (dag_id, dag, name, tenant, tokens, bind, request)
+        # — request is None until the gate first sees the DAG, then carries
+        # the attempt count
+        for at, dag_id, dag, name, tenant, tokens, bind in arrivals:
             heapq.heappush(events,
                            (at, next(seq), ARRIVE,
-                            (dag_id, dag, name, tenant, None)))
+                            (dag_id, dag, name, tenant, tokens, bind, None)))
 
         def cluster_of(worker: int) -> str:
             return self.spec.class_of(worker)
@@ -698,11 +701,11 @@ class Simulator:
                 raise RuntimeError("simulator exceeded max_events (livelock?)")
             now, _, kind, payload = heapq.heappop(events)
             if kind == ARRIVE:
-                dag_id, dag, name, tenant, req = payload
+                dag_id, dag, name, tenant, tokens, bind, req = payload
                 st = stats.get(dag_id)
                 if st is None:   # first evaluation: now == DagArrival.at
                     st = DagStats.for_arrival(dag_id, name, now, len(dag),
-                                              tenant=tenant)
+                                              tenant=tenant, tokens=tokens)
                     stats[dag_id] = st
                 # empty DAGs bypass the gate (done on arrival, consume
                 # nothing); everything else asks admit/delay/reject
@@ -739,7 +742,8 @@ class Simulator:
                         retry = max(verdict.retry_at, now + 1e-9)
                         heapq.heappush(events,
                                        (retry, next(seq), ARRIVE,
-                                        (dag_id, dag, name, tenant, req)))
+                                        (dag_id, dag, name, tenant, tokens,
+                                         bind, req)))
                         continue
                     if verdict.action == REJECT:
                         st.mark_rejected()
@@ -749,6 +753,11 @@ class Simulator:
                 st.mark_admitted(now)
                 if ctrl is not None:
                     backlog_ns[tenant] = backlog_ns.get(tenant, 0) + len(dag)
+                # deferred payload binding, mirroring the threaded admitter:
+                # bind runs once, for admitted DAGs only (rejected arrivals
+                # never materialize their payload closures)
+                if bind is not None:
+                    bind(dag)
                 roots = self.core.prepare(dag, dag_id=dag_id)
                 for r in roots:
                     enqueue_ready(r, waker=0, t0=now)

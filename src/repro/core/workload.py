@@ -41,6 +41,15 @@ virtual time, :meth:`repro.core.runtime.ThreadedRuntime.run_workload`
 admits the same stream at real wall-clock offsets into the live thread
 pool.  Both return a ``WorkloadResult``.
 
+Real payloads: a ``DagArrival`` may carry ``tokens`` (application work
+units — serving attaches prompt+gen tokens, aggregated into
+``WorkloadResult.tokens_by_tenant`` / ``token_throughput``) and a ``bind``
+callback.  ``bind(dag)`` runs exactly once per admitted DAG, on the
+admitting thread (simulator event loop / threaded admitter) right before
+``SchedulerCore.prepare`` — the hook the serving orchestrator uses to
+attach real jitted-kernel ``ChunkedWork`` payloads lazily, so a rejected
+request never materializes its closures.
+
 Thread-safety contract: everything here is passive data.  ``Workload`` is
 built single-threaded and only read during a run; ``DagStats`` objects
 are mutated by exactly one simulator event loop, or under the threaded
@@ -55,7 +64,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
 from .dag import TaoDag
 from .simulator import SimResult
@@ -72,6 +81,16 @@ class DagArrival:
     # admission-control namespace: gates rate-limit / SLO-track per tenant,
     # so DAGs of one tenant share a bucket and an SLO
     tenant: str = "default"
+    # units of application work this DAG represents (serving: prompt+gen
+    # tokens) — pure accounting, never consulted by scheduling; flows into
+    # ``DagStats.tokens`` so results can report per-tenant token throughput
+    tokens: float = 0.0
+    # deferred payload binding: both vehicles call ``bind(dag)`` exactly
+    # once, at admission time and before ``SchedulerCore.prepare`` — so real
+    # payloads (jitted-kernel ``ChunkedWork`` closures) are materialized only
+    # for DAGs that actually enter the system, and a rejected arrival never
+    # pays for them.  ``None`` leaves build-time payloads untouched.
+    bind: Callable[[TaoDag], None] | None = None
 
     def __repr__(self) -> str:
         return (f"DagArrival(dag_id={self.dag_id}, at={self.at:.4f}, "
@@ -96,7 +115,8 @@ class Workload:
 
     # -- construction -------------------------------------------------------
     def add(self, dag: TaoDag, at: float = 0.0, name: str = "",
-            tenant: str = "default") -> DagArrival:
+            tenant: str = "default", tokens: float = 0.0,
+            bind: Callable[[TaoDag], None] | None = None) -> DagArrival:
         if at < 0:
             raise ValueError(f"arrival time must be >= 0, got {at}")
         if id(dag) in self._seen_obj_ids:
@@ -108,7 +128,8 @@ class Workload:
                 "submit it again")
         did = next(self._ids)
         arr = DagArrival(dag=dag, at=float(at), dag_id=did,
-                         name=name or f"dag{did}", tenant=tenant)
+                         name=name or f"dag{did}", tenant=tenant,
+                         tokens=float(tokens), bind=bind)
         self._arrivals.append(arr)
         self._seen_obj_ids.add(id(dag))
         return arr
@@ -159,15 +180,19 @@ class DagStats:
     # gap its continuations spent waiting to be re-placed
     preempted_count: int = 0
     preemption_delay: float = 0.0
+    # application work units (serving: prompt+gen tokens) carried by the
+    # arrival; aggregated per tenant by WorkloadResult.tokens_by_tenant
+    tokens: float = 0.0
 
     @classmethod
     def for_arrival(cls, dag_id: int, name: str, arrival: float,
-                    n_taos: int, tenant: str = "default") -> "DagStats":
+                    n_taos: int, tenant: str = "default",
+                    tokens: float = 0.0) -> "DagStats":
         """Stats entry for a DAG joining the system; both execution
         vehicles use this so the degenerate rule (an empty DAG is done on
         arrival) lives in exactly one place."""
         st = cls(dag_id=dag_id, name=name, arrival=arrival, n_taos=n_taos,
-                 tenant=tenant)
+                 tenant=tenant, tokens=tokens)
         if n_taos == 0:
             # empty DAGs bypass the admission gate on both vehicles
             st.admitted = arrival
@@ -350,6 +375,34 @@ class WorkloadResult(SimResult):
             ok = sum(1 for s in stats if s.done and s.sojourn <= _slo_of(s, slo))
             out[tenant] = ok / len(stats)
         return out
+
+    # -- token accounting ----------------------------------------------------
+    # Tokens are pure application-work units attached at Workload.add time
+    # (serving: prompt+gen tokens per request).  Only *completed* DAGs count
+    # toward throughput: a rejected or still-running request has not
+    # delivered its tokens, however many it carried in.
+    def tokens_done(self) -> float:
+        """Tokens of work the completed DAGs delivered."""
+        return sum(s.tokens for s in self.per_dag.values() if s.done)
+
+    def tokens_by_tenant(self) -> dict:
+        """``tenant -> delivered tokens`` over completed DAGs."""
+        return {tenant: sum(s.tokens for s in stats if s.done)
+                for tenant, stats in self.per_tenant().items()}
+
+    def token_throughput(self) -> float:
+        """Delivered tokens / makespan (0 when the run spans no time)."""
+        if self.makespan <= 0:
+            return 0.0
+        return self.tokens_done() / self.makespan
+
+    def token_throughput_by_tenant(self) -> dict:
+        """``tenant -> delivered tokens / makespan`` — the per-tenant
+        serving throughput surface benches report."""
+        if self.makespan <= 0:
+            return {t: 0.0 for t in self.per_tenant()}
+        return {t: toks / self.makespan
+                for t, toks in self.tokens_by_tenant().items()}
 
     def sojourn_p50(self) -> float:
         return percentile(self.sojourns(), 50)

@@ -24,7 +24,14 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--orchestrate", action="store_true")
+    ap.add_argument("--zoo", action="store_true",
+                    help="orchestrate a bursty two-tenant trace through the "
+                         "tenant zoo instead of a single-model batch")
     args = ap.parse_args(argv)
+
+    if args.zoo:
+        _run_zoo(args)
+        return
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encoder":
@@ -67,12 +74,49 @@ def main(argv=None) -> None:
                                                run_serving_threaded)
         reqs = [ServeRequest(i, args.prompt_len, args.gen)
                 for i in range(args.batch * 4)]
-        out = run_serving_threaded(
+        stats = run_serving_threaded(
             reqs, hikey960(), make_policy("molding:weight"),
-            prefill_fn=lambda r: prefill_j(params, {"tokens": toks}),
-            decode_fn=lambda r, i: decode_j(params, next_tok, cache))
-        print(f"orchestrated: {out['completed']} TAOs, "
-              f"{out['tokens_per_s']:.0f} tok/s (scheduler view)")
+            prefill_fn=lambda r: jax.block_until_ready(
+                prefill_j(params, {"tokens": toks})[0]),
+            decode_fn=lambda r, i: jax.block_until_ready(
+                decode_j(params, next_tok, cache)[0]))
+        print(f"orchestrated: {stats.result.completed} TAOs, "
+              f"{stats.tokens_per_s:.0f} tok/s, "
+              f"mean sojourn {stats.mean_latency * 1e3:.1f} ms, "
+              f"p99 {stats.p99_latency * 1e3:.1f} ms")
+
+
+def _run_zoo(args) -> None:
+    """Bursty two-tenant trace through the tenant zoo on real threads."""
+    from ..core import hikey960, make_policy
+    from ..core.admission import make_gate
+    from ..core.preemption import make_preemption
+    from ..core.serve_orchestrator import (bursty_serving_trace,
+                                           run_serving_workload_threaded)
+    from .zoo import default_zoo, warm_zoo, zoo_binder
+
+    zoo = default_zoo()
+    print(f"warming zoo: { {n: t.flavor for n, t in zoo.items()} }")
+    warm_zoo(zoo)
+    reqs = bursty_serving_trace(n_steady=12, n_burst=12, burst_at=0.2,
+                                steady_prompts=(512, 1024), steady_gens=(64,),
+                                burst_prompts=(2048, 4096), burst_gens=(64,))
+    stats = run_serving_workload_threaded(
+        reqs, hikey960(), make_policy("molding:weight"), zoo_binder(zoo),
+        admission=make_gate("token-bucket", rate=40.0, burst=8,
+                            max_delay=2.0),
+        preemption=make_preemption("critical-boost"))
+    print(f"zoo: {stats.result.completed} TAOs, "
+          f"{stats.tokens_per_s:.0f} tok/s, p99 sojourn "
+          f"{stats.p99_latency:.3f}s")
+    for tenant, p99 in sorted(stats.p99_by_tenant().items()):
+        tps = stats.tokens_per_s_by_tenant.get(tenant, 0.0)
+        print(f"  {tenant:8s} p99={p99:.3f}s tok/s={tps:.0f}")
+    for typ, cells in sorted(stats.ptt_profiles.items()):
+        if cells:
+            fastest = min(cells.values())
+            print(f"  PTT[{typ}]: {len(cells)} measured cells, "
+                  f"fastest {fastest * 1e3:.2f} ms")
 
 
 if __name__ == "__main__":

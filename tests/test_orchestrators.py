@@ -35,9 +35,10 @@ def test_simulated_serving_policies_complete():
     reqs = _requests(30)
     for pol in ("homogeneous", "weight", "molding:weight"):
         stats = simulate_serving(reqs, hikey960(), make_policy(pol), seed=0)
-        assert stats.sim.completed == len(stats.sim.trace)
+        assert stats.result.completed == len(stats.result.trace)
         assert stats.tokens_per_s > 0
         assert stats.p99_latency >= stats.mean_latency
+        assert len(stats.latencies) == len(reqs)
 
 
 def test_weight_policy_learns_prefill_big_decode_little():
@@ -48,7 +49,7 @@ def test_weight_policy_learns_prefill_big_decode_little():
     stats = simulate_serving(reqs, spec, make_policy("weight"), seed=1)
     big, little = set(spec.big_workers), set(spec.little_workers)
     place = {"prefill": [0, 0], "decode": [0, 0]}  # [on_big, on_little]
-    warm = [r for r in stats.sim.trace if r.start > stats.makespan * 0.3]
+    warm = [r for r in stats.result.trace if r.start > stats.makespan * 0.3]
     for rec in warm:
         on_big = sum(1 for m in rec.participants if m in big)
         on_little = len(rec.participants) - on_big
@@ -84,8 +85,12 @@ def test_serving_threaded_with_real_model():
     reqs = _requests(6, seed=2)
     out = run_serving_threaded(reqs, hikey960(), make_policy("molding:weight"),
                                prefill_fn, decode_fn, timeout_s=120)
-    assert out["completed"] == sum(
+    assert out.result.completed == sum(
         1 + -(-r.gen_len // 64) for r in reqs)  # prefill + decode bursts
+    assert set(out.latencies) == {r.id for r in reqs}
+    assert all(lat > 0 for lat in out.latencies.values())
+    # the threaded vehicle's PTT holds *measured* wall-clock kernel times
+    assert out.ptt_profiles.get("prefill") and out.ptt_profiles.get("decode")
 
 
 def test_training_dag_structure():
