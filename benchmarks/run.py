@@ -18,6 +18,12 @@ figure's own metric, e.g. TAOs/s for Fig 6).
            two-tenant admission x preemption A/B on both vehicles (sim with
            calibrated models, threaded with real zoo kernels); writes the
            JSON report to `--out` (default benchmarks/BENCH_serve.json).
+  impl   — implementation-variant A/B (joint (impl, width, leader)
+           placement): byte-identity pin gate, then static single-impl legs
+           vs the joint decision on both vehicles (sim on cluster-divergent
+           per-(type, impl) cost curves, threaded with every host-available
+           kernel impl bound as TAO variants); writes
+           `--out` (default benchmarks/BENCH_impl.json).
   train  — training-DAG orchestrator at fleet scale.
   roofline — per (arch x shape) roofline terms from the dry-run artifacts
              (see EXPERIMENTS.md §Roofline; requires experiments/dryrun/).
@@ -512,6 +518,198 @@ def serve_bench(vehicle: str = "both", admission: str = "token-bucket",
         print(f"# serve report -> {path}", flush=True)
 
 
+def _impl_sim_models() -> dict:
+    """Per-(type, impl) cost curves for the implementation A/B.
+
+    Calibrated so the best variant differs per *cluster class* (the
+    arXiv:2108.13871 shape the joint decision exists for): ``interpret``
+    models a vectorizer-friendly variant that pays off on the wide big cores
+    but loses to ``ref`` on LITTLE for matmul, and the reverse for sort;
+    copy stays single-variant to show both kinds coexist in one DAG.  The
+    bare-type entries keep the paper's Fig-4 curves as the fallback/static
+    baseline.
+    """
+    from repro.core import BIG, LITTLE, KernelModel, paper_kernel_models
+
+    models = paper_kernel_models()
+    eff_mm = {1: 1.0, 2: 0.98, 4: 0.96, 8: 0.94}
+    eff_sort = {1: 1.0, 2: 0.80, 4: 0.55, 8: 0.35}
+    models[("matmul", "ref")] = KernelModel(
+        t_ref=0.010, speed={BIG: 2.4, LITTLE: 1.0}, efficiency=eff_mm)
+    models[("matmul", "interpret")] = KernelModel(
+        t_ref=0.010, speed={BIG: 3.4, LITTLE: 0.7}, efficiency=eff_mm)
+    models[("sort", "ref")] = KernelModel(
+        t_ref=0.010, speed={BIG: 1.15, LITTLE: 1.0}, efficiency=eff_sort,
+        cache_penalty=0.12)
+    models[("sort", "interpret")] = KernelModel(
+        t_ref=0.010, speed={BIG: 0.9, LITTLE: 1.4}, efficiency=eff_sort,
+        cache_penalty=0.12)
+    return models
+
+
+def _measured_cells(ptt, spec) -> dict:
+    """``{type: {impl: {"w<width>@<leader>": ms}}}`` over tried cells."""
+    out: dict = {}
+    for typ in ptt.types():
+        table = ptt.table(typ)
+        per_impl: dict = {}
+        for impl in table.impls():
+            snap = table.snapshot(impl=impl)
+            cells = {f"w{width}@{leader}": round(float(snap[leader, wi]) * 1e3,
+                                                 4)
+                     for wi, width in enumerate(spec.widths)
+                     for leader in range(spec.n_workers)
+                     if snap[leader, wi] > 0.0}
+            if cells:
+                per_impl[impl] = cells
+        out[typ] = per_impl
+    return out
+
+
+def _impl_choice_by_cluster(ptt, spec, names, width: int = 2) -> dict:
+    """Which variant the joint decision now picks per cluster class."""
+    out: dict = {}
+    for typ in ptt.types():
+        table = ptt.table(typ)
+        row = {}
+        for cls, workers in (("big", spec.big_workers),
+                             ("little", spec.little_workers)):
+            leader = next((w for w in workers if w % width == 0), None)
+            if leader is None:
+                continue
+            impl, t = table.best_impl(leader, width, names)
+            if t > 0.0:     # tried cells only: a 0.0 would be exploration
+                row[cls] = {"impl": impl, "ewma_ms": round(t * 1e3, 4)}
+        if row:
+            out[typ] = row
+    return out
+
+
+def impl_bench(vehicle: str = "both",
+               out: str = "benchmarks/BENCH_impl.json") -> None:
+    """Implementation-variant A/B: static single-impl legs vs the joint
+    (impl, width, leader) placement, on both vehicles.
+
+    Gate first: the byte-identity pins (single-variant TAOs must schedule
+    exactly as the pre-variant stack) are recomputed and any mismatch aborts
+    the bench with a non-zero exit — that check is deterministic virtual-time
+    scheduling, so CI failing on it is never a timing flake.  The simulator
+    leg then A/Bs static-ref / static-interpret / joint on cluster-divergent
+    per-(type, impl) cost curves (one shared Simulator, reset_learning()
+    between legs so no profile leaks); the threaded leg serves the bursty
+    two-tenant trace with the kernel tenant's zoo payloads bound once per
+    host-available implementation (``multi_impl``), recording *measured*
+    per-(class, impl, width) PTT cells.
+    """
+    from repro.core import (ImplVariant, Simulator, hikey960, make_policy,
+                            percentile, random_workload)
+    from repro.core.identity import check_pins
+
+    # -- byte-identity gate (deterministic: a failure is a refactor bug) ---
+    violations = check_pins()
+    for v in violations:
+        print(f"# BYTE-IDENTITY VIOLATION: {v}", flush=True)
+    if violations:
+        sys.exit("impl bench aborted: single-variant schedules diverged "
+                 "from the pinned pre-variant signatures")
+    emit("impl.identity.pins", 0.0, "8/8 pinned signatures reproduced")
+
+    spec = hikey960()
+    report: dict = {
+        "spec": "hikey960 (4 big + 4 LITTLE)",
+        "identity": {"pinned": 8, "violations": violations},
+        "sim": {}, "threaded": {},
+    }
+
+    # -- simulator leg: static vs joint on cluster-divergent curves --------
+    if vehicle in ("sim", "both"):
+        models = _impl_sim_models()
+        names = ("ref", "interpret")
+
+        def leg_workload(leg):
+            # copy stays single-variant (no per-impl curve) in every leg:
+            # the joint machinery must coexist with legacy TAOs in one DAG
+            chosen = [leg] if leg in names else list(names)
+            impls = {kt: [ImplVariant(n) for n in chosen]
+                     for kt in ("matmul", "sort")}
+            return random_workload(n_dags=6, rate=4.0, n_tasks=120, seed=2,
+                                   width_hint=2, impls=impls)
+
+        sim = Simulator(spec, make_policy("molding:adaptive"), seed=7,
+                        kernel_models=models)
+        for leg in ("ref", "interpret", "joint"):
+            sim.reset_learning()     # legs must not leak learned profiles
+            res = sim.run(leg_workload(leg))
+            sojourns = [st.sojourn for st in res.per_dag.values() if st.done]
+            row = {
+                "makespan_s": round(res.makespan, 6),
+                "completed": res.completed,
+                "p99_sojourn_s": round(percentile(sojourns, 99), 6),
+            }
+            if leg == "joint":
+                row["measured_cells"] = _measured_cells(sim.core.ptt, spec)
+                row["impl_choice_by_cluster"] = _impl_choice_by_cluster(
+                    sim.core.ptt, spec, names)
+            report["sim"][leg] = row
+            emit(f"impl.sim.{leg}", res.makespan / max(res.completed, 1) * 1e6,
+                 f"makespan={res.makespan:.4f}s;"
+                 f"p99={row['p99_sojourn_s']:.4f}s")
+        best_static = min(report["sim"]["ref"]["makespan_s"],
+                          report["sim"]["interpret"]["makespan_s"])
+        report["sim"]["joint_vs_best_static"] = round(
+            report["sim"]["joint"]["makespan_s"] / best_static, 4)
+
+    # -- threaded leg: real kernels, measured per-(class, impl, width) -----
+    if vehicle in ("threaded", "both"):
+        from repro.core.serve_orchestrator import (
+            bursty_serving_trace, run_serving_workload_threaded)
+        from repro.kernels import ops
+        from repro.launch.zoo import default_zoo, warm_zoo, zoo_binder
+
+        avail = [im.name for im in ops.available_impls()]
+        report["threaded"]["host_impls"] = avail
+        for leg, multi in (("static", False), ("joint", True)):
+            zoo = default_zoo(slab_tokens=1024, multi_impl=multi)
+            warm_zoo(zoo)
+            reqs = bursty_serving_trace(
+                n_steady=8, steady_rate=30.0, n_burst=10, burst_at=0.15,
+                burst_rate=300.0, steady_prompts=(512, 1024),
+                steady_gens=(64,), burst_prompts=(2048, 4096),
+                burst_gens=(64, 128), seed=1)
+            st = run_serving_workload_threaded(
+                reqs, spec, make_policy("molding:weight"), zoo_binder(zoo),
+                seed=1, timeout_s=120.0)
+            # group the measured cells per impl ((worker, width) keys carry
+            # the default impl; (worker, width, impl) the variants)
+            cells_by_impl: dict = {}
+            for typ, cells in st.ptt_profiles.items():
+                per: dict = {}
+                for key, v in cells.items():
+                    w, wd = key[0], key[1]
+                    impl = key[2] if len(key) == 3 else "default"
+                    per.setdefault(impl, {})[f"w{wd}@{w}"] = round(v * 1e3, 4)
+                cells_by_impl[typ] = per
+            fastest = {typ: {im: round(min(c.values()), 4)
+                             for im, c in per.items()}
+                       for typ, per in cells_by_impl.items() if per}
+            report["threaded"][leg] = {
+                "completed_requests": len(st.latencies),
+                "tokens_per_s": round(st.tokens_per_s, 1),
+                "p99_sojourn_s": round(st.p99_latency, 6),
+                "measured_cells": cells_by_impl,
+                "fastest_ms_by_impl": fastest,
+            }
+            emit(f"impl.threaded.{leg}", st.mean_latency * 1e6,
+                 f"tok/s={st.tokens_per_s:.0f};p99={st.p99_latency:.4f}s;"
+                 f"impls={'+'.join(avail) if multi else 'auto'}")
+
+    if out:
+        path = pathlib.Path(out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"# impl report -> {path}", flush=True)
+
+
 def train_bench() -> None:
     from repro.core import fleet, make_policy
     from repro.core.train_orchestrator import simulate_training
@@ -560,7 +758,7 @@ def roofline(dryrun_dir: str = "experiments/dryrun/single_pod") -> None:
 
 # ---------------------------------------------------------------------------
 SECTIONS = ("all", "fig4", "fig6", "tab", "multi-dag", "multidag", "serve",
-            "train", "roofline")
+            "impl", "train", "roofline")
 
 
 VEHICLES = ("sim", "threaded")
@@ -672,6 +870,11 @@ def main() -> None:
                     preemption=(preemption if preemption != "none"
                                 else "critical-boost"),
                     out=out or "benchmarks/BENCH_serve.json")
+    if sel("impl"):
+        # implementation-variant A/B: byte-identity gate + static-vs-joint
+        # placement on both vehicles (--vehicle narrows, --out overrides)
+        impl_bench(vehicle=vehicle if vehicle_set else "both",
+                   out=out or "benchmarks/BENCH_impl.json")
     if sel("train"):
         train_bench()
     if sel("roofline"):

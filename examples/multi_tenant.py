@@ -23,9 +23,10 @@ Run:  PYTHONPATH=src python examples/multi_tenant.py
 """
 import math
 
-from repro.core import (Simulator, ThreadedRuntime, Workload, bursty_workload,
-                        fleet, hikey960, make_gate, make_policy,
-                        make_preemption, percentile, random_dag,
+from repro.core import (BIG, LITTLE, ImplVariant, KernelModel, Simulator,
+                        ThreadedRuntime, Workload, bursty_workload, fleet,
+                        hikey960, make_gate, make_policy, make_preemption,
+                        paper_kernel_models, percentile, random_dag,
                         random_workload)
 
 
@@ -168,12 +169,63 @@ def preemption_demo() -> None:
                   f"total")
 
 
+def impl_variant_demo() -> None:
+    """Implementation-variant TAOs: every matmul carries two builds — a
+    ``ref`` kernel that is the faster one on LITTLE cores and a ``vector``
+    build that pays off on big ones — and the scheduler picks the build
+    *jointly* with (leader, width) from per-(class, impl) PTT cells.  The
+    joint run is compared against forcing either build everywhere, then the
+    learned per-(class, impl, width) profile is printed: the divergence per
+    cluster is the thing no static choice can express."""
+    print("\n== implementation variants: joint (impl, width, leader) "
+          "placement ==")
+    models = paper_kernel_models()
+    eff = {1: 1.0, 2: 0.98, 4: 0.96, 8: 0.94}
+    models[("matmul", "ref")] = KernelModel(
+        t_ref=0.010, speed={BIG: 2.4, LITTLE: 1.0}, efficiency=eff)
+    models[("matmul", "vector")] = KernelModel(
+        t_ref=0.010, speed={BIG: 3.4, LITTLE: 0.7}, efficiency=eff)
+
+    spec = hikey960()
+    sim = Simulator(spec, make_policy("molding:adaptive"),
+                    kernel_models=models, seed=1)
+    for leg in ("ref", "vector", "joint"):
+        chosen = ("ref", "vector") if leg == "joint" else (leg,)
+        wl = random_workload(n_dags=4, rate=4.0, n_tasks=80, seed=2,
+                             width_hint=2,
+                             impls={"matmul": [ImplVariant(n)
+                                               for n in chosen]})
+        res = sim.run_workload(wl)
+        print(f"  {leg:7s} makespan={res.makespan:.3f}s "
+              f"p99={res.sojourn_p99():.3f}s")
+        if leg != "joint":
+            sim.reset_learning()   # each leg learns from scratch
+
+    print("  learned per-(class, impl, width) profile (joint leg):")
+    ptt = sim.core.ptt
+    for typ in sorted(ptt.types()):
+        table = ptt.table(typ)
+        for impl in sorted(table.impls()):
+            for width in spec.widths:
+                tried = [(table.time(ld, width, impl=impl), ld)
+                         for ld in range(spec.n_workers)
+                         if table.time(ld, width, impl=impl) > 0.0]
+                if not tried:
+                    continue
+                best_t, best_l = min(tried)
+                cls = spec.classes[best_l]
+                print(f"    PTT[{typ}][{impl}] w={width}: {len(tried)} "
+                      f"cells, best {best_t * 1e3:.2f} ms @ leader "
+                      f"{best_l} ({cls})")
+
+
 def main() -> None:
     trace_driven_demo()
     poisson_stream_demo()
     threaded_vehicle_demo()
     admission_control_demo()
     preemption_demo()
+    impl_variant_demo()
 
 
 if __name__ == "__main__":

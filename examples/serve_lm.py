@@ -55,9 +55,20 @@ def main() -> None:
           f"({out.tokens_per_s:.0f} tok/s, p99 sojourn "
           f"{out.p99_latency * 1e3:.1f} ms)")
     for typ, cells in sorted(out.ptt_profiles.items()):
-        if cells:
-            print(f"  measured PTT[{typ}]: {len(cells)} cells, fastest "
-                  f"{min(cells.values()) * 1e3:.2f} ms")
+        if not cells:
+            continue
+        # keys are (leader, width) for the default implementation and
+        # (leader, width, impl) for measured variants (multi-impl zoo
+        # tenants, see benchmarks/run.py --workload impl): fold them into a
+        # per-(class, impl, width) view of what the scheduler learned
+        by_impl_width: dict = {}
+        for key, t in cells.items():
+            impl = key[2] if len(key) == 3 else "default"
+            by_impl_width.setdefault((impl, key[1]), []).append(t)
+        print(f"  measured PTT[{typ}]: {len(cells)} cells")
+        for (impl, width), ts in sorted(by_impl_width.items()):
+            print(f"    impl={impl:10s} w={width}: {len(ts):2d} cells, "
+                  f"fastest {min(ts) * 1e3:.2f} ms")
 
 
 if __name__ == "__main__":

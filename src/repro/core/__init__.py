@@ -4,9 +4,10 @@ placement and task molding (Rohlin, Fahlgren, Pericàs — HIP3ES 2019)."""
 from .admission import (ALL_GATE_NAMES, AdmissionDecision, AdmissionGate,
                         AdmissionRequest, LoadSignals, NoAdmission,
                         SloAdaptiveGate, TokenBucketGate, make_gate)
-from .dag import TAO, TaoDag, chain
+from .dag import DEFAULT_IMPL, TAO, ImplVariant, TaoDag, chain
 from .dag_gen import (KERNEL_TYPES, bursty_workload, paper_dags, random_dag,
                       random_workload)
+from .identity import trace_signature
 from .places import (BIG, LITTLE, ClusterSpec, fleet, hikey960, homogeneous,
                      leader_of, place_members, valid_widths)
 from .policies import (ALL_POLICY_NAMES, AdaptivePolicy,
@@ -26,6 +27,7 @@ from .workload import (DagArrival, DagStats, Workload, WorkloadResult,
                        percentile)
 
 __all__ = [
+    "DEFAULT_IMPL", "ImplVariant",
     "TAO", "TaoDag", "chain", "KERNEL_TYPES", "paper_dags", "random_dag",
     "random_workload", "bursty_workload",
     "ALL_GATE_NAMES", "AdmissionDecision", "AdmissionGate",
@@ -43,4 +45,5 @@ __all__ = [
     "KernelModel", "SimResult", "Simulator", "paper_kernel_models",
     "run_policy",
     "DagArrival", "DagStats", "Workload", "WorkloadResult", "percentile",
+    "trace_signature",
 ]

@@ -19,6 +19,35 @@ import itertools
 from collections import deque
 from typing import Any, Callable, Iterable, Sequence
 
+# Name of the implicit implementation variant carried by every TAO that does
+# not declare alternatives.  Single-variant TAOs must schedule byte-identically
+# to the pre-variant stack, so this is both the legacy PTT key and the
+# ``assigned_impl`` of every TAO the policies treat via the legacy code path.
+DEFAULT_IMPL = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplVariant:
+    """One named implementation alternative of a TAO (arXiv:2108.13871).
+
+    ``payload`` is the runtime-specific work for this variant (same contract
+    as ``TAO.work``); ``None`` means "reuse ``TAO.work``", which lets cost-only
+    variants share a simulator payload.  ``min_width``/``max_width`` bound the
+    widths this variant can execute at (``max_width=0`` = unbounded); the
+    scheduler clamps its molding decision into ``[min_width, max_width]``
+    after choosing the variant.
+
+    Variant payloads must share the TAO's chunk structure (same ``n_chunks``)
+    — the preemption :class:`~repro.core.preemption.ChunkCursor` is
+    variant-agnostic, and a continuation resumes under the impl it started
+    with (the scheduler pins ``assigned_impl`` across preemption segments).
+    """
+
+    name: str
+    payload: Any = None
+    min_width: int = 1
+    max_width: int = 0  # 0 = no upper bound beyond the spec's widths
+
 
 @dataclasses.dataclass
 class TAO:
@@ -47,6 +76,38 @@ class TAO:
     # ChunkCursor execution state, created lazily by the vehicles when the
     # TAO first executes under a preemption-capable path; cleared per run
     cursor: Any = None
+    # alternative implementations (ordered; empty = the single legacy variant
+    # named DEFAULT_IMPL whose payload is ``work``) and the variant chosen at
+    # wake-up.  Continuations keep their impl: chunk state is impl-specific.
+    impls: tuple = ()
+    assigned_impl: str = DEFAULT_IMPL
+
+    # -- implementation variants ------------------------------------------
+    def impl_names(self) -> tuple:
+        """Ordered variant names; ``(DEFAULT_IMPL,)`` when none declared."""
+        if not self.impls:
+            return (DEFAULT_IMPL,)
+        return tuple(v.name for v in self.impls)
+
+    def variant(self, name: str) -> ImplVariant | None:
+        for v in self.impls:
+            if v.name == name:
+                return v
+        return None
+
+    def payload_for(self, name: str):
+        """The runtime payload of variant ``name`` (falls back to ``work``)."""
+        v = self.variant(name)
+        if v is not None and v.payload is not None:
+            return v.payload
+        return self.work
+
+    def width_bounds(self, name: str) -> tuple:
+        """``(min_width, max_width)`` of variant ``name`` (0 = unbounded)."""
+        v = self.variant(name)
+        if v is None:
+            return (1, 0)
+        return (v.min_width, v.max_width)
 
     def __hash__(self) -> int:  # identity hash: TAOs are unique nodes
         return id(self)
@@ -73,8 +134,10 @@ class TaoDag:
         return tao
 
     def add_task(self, type: str, work: Any = None, width_hint: int = 1,
-                 deps: Sequence[TAO] = ()) -> TAO:
-        tao = self.add(TAO(type=type, work=work, width_hint=width_hint))
+                 deps: Sequence[TAO] = (),
+                 impls: Sequence[ImplVariant] = ()) -> TAO:
+        tao = self.add(TAO(type=type, work=work, width_hint=width_hint,
+                           impls=tuple(impls)))
         for d in deps:
             self.add_edge(d, tao)
         return tao
@@ -144,6 +207,7 @@ class TaoDag:
             n.assigned_width = 0
             n.assigned_leader = -1
             n.cursor = None
+            n.assigned_impl = n.impls[0].name if n.impls else DEFAULT_IMPL
 
     def validate(self) -> None:
         self.topological()  # raises on cycle

@@ -16,7 +16,22 @@ from __future__ import annotations
 import random
 from typing import Sequence
 
-from .dag import TAO, TaoDag
+from .dag import TAO, ImplVariant, TaoDag
+
+
+def _impls_for(impls, kernel_type: str):
+    """Resolve a generator ``impls`` argument for one node's kernel type.
+
+    ``impls`` may be a flat sequence of :class:`ImplVariant` (every node
+    carries the same alternatives) or a mapping ``kernel_type -> sequence``
+    (per-class alternatives; types absent from the mapping stay
+    single-variant).  Attaching variants never consumes RNG state, so a
+    generator call with and without ``impls`` builds the same topology."""
+    if not impls:
+        return ()
+    if isinstance(impls, dict):
+        return tuple(impls.get(kernel_type, ()))
+    return tuple(impls)
 
 KERNEL_TYPES = ("matmul", "sort", "copy")  # paper's three TAO classes
 
@@ -30,6 +45,7 @@ def random_dag(
     max_extra_parents: int = 2,
     jump_prob: float = 0.15,
     max_jump: int = 3,
+    impls=(),
 ) -> TaoDag:
     """Layered Topcuoglu-style random DAG with ``n_tasks`` nodes.
 
@@ -65,7 +81,11 @@ def random_dag(
     # --- build layers --------------------------------------------------------
     layers: list[list[TAO]] = []
     for w in widths:
-        layer = [dag.add_task(next(it), width_hint=width_hint) for _ in range(w)]
+        layer = []
+        for _ in range(w):
+            kt = next(it)
+            layer.append(dag.add_task(kt, width_hint=width_hint,
+                                      impls=_impls_for(impls, kt)))
         layers.append(layer)
 
     for li in range(1, len(layers)):
@@ -108,6 +128,7 @@ def random_workload(
     kernel_types: Sequence[str] = KERNEL_TYPES,
     seed: int = 0,
     width_hint: int = 1,
+    impls=(),
 ):
     """A multi-tenant arrival stream of mixed random DAGs.
 
@@ -130,7 +151,8 @@ def random_workload(
         degree = rng.choice(list(degrees))
         dag = random_dag(n_tasks, target_degree=degree,
                          kernel_types=kernel_types,
-                         seed=rng.randrange(2 ** 31), width_hint=width_hint)
+                         seed=rng.randrange(2 ** 31), width_hint=width_hint,
+                         impls=impls)
         wl.add(dag, at=t, name=f"dag{i}(deg={degree})")
         t += rng.expovariate(rate)
     return wl
@@ -148,6 +170,7 @@ def bursty_workload(
     seed: int = 0,
     width_hint: int = 1,
     n_chunks: int = 1,
+    impls=(),
 ):
     """Two-tenant admission-control stress stream.
 
@@ -172,7 +195,8 @@ def bursty_workload(
     t = 0.0
     for i in range(1, n_steady + 1):
         dag = random_dag(steady_tasks, target_degree=rng.choice(list(degrees)),
-                         seed=rng.randrange(2 ** 31), width_hint=width_hint)
+                         seed=rng.randrange(2 ** 31), width_hint=width_hint,
+                         impls=impls)
         for node in dag.nodes:
             node.n_chunks = n_chunks
         wl.add(dag, at=t, name=f"steady{i}", tenant="steady")
@@ -180,7 +204,8 @@ def bursty_workload(
     t = burst_at
     for i in range(1, n_burst + 1):
         dag = random_dag(burst_tasks, target_degree=rng.choice(list(degrees)),
-                         seed=rng.randrange(2 ** 31), width_hint=width_hint)
+                         seed=rng.randrange(2 ** 31), width_hint=width_hint,
+                         impls=impls)
         for node in dag.nodes:
             node.n_chunks = n_chunks
         wl.add(dag, at=t, name=f"burst{i}", tenant="burst")

@@ -18,17 +18,36 @@ Implemented policies:
 * ``MoldingPolicy``        — width molding wrapper: load-based first,
                              history-based (time*width) otherwise; composes
                              with any placement policy above.
+
+Implementation variants (arXiv:2108.13871): every policy picks the TAO's
+implementation *jointly* with leader and width.  Single-variant TAOs (the
+default) take the exact legacy code path — same PTT reads, same RNG draws —
+so pre-variant schedules reproduce byte-identically; TAOs declaring several
+``ImplVariant``s route through the per-(class, impl, width) PTT cells:
+untried (impl, width) cells are explored first (zero-init, impl-major in
+declared order), then the EWMA-best cell wins.  Preemption-aware damping
+(displacement history via ``SchedulerContext.displacements``) shrinks the
+width/impl aggressiveness of chronically-preempted tenants: a damped tenant
+stops exploring untried variant cells and molds narrower.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 import threading
-from typing import Protocol
+from typing import Protocol, Sequence
 
-from .dag import TAO
+from .dag import DEFAULT_IMPL, TAO
 from .places import BIG, LITTLE, ClusterSpec, leader_of
-from .ptt import PTTRegistry
+from .ptt import PTT, PTTRegistry
+
+# one width halving (and exploration shut-off) per this many displacements,
+# capped: displacement counts accumulate over a whole run, and an uncapped
+# level would crush a long-running bursty tenant's widths to 1 (and its
+# throughput/goodput with them) instead of gently de-escalating it
+DAMP_DISPLACEMENTS = 4
+DAMP_MAX_LEVEL = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +56,7 @@ class Placement:
 
     target: int   # worker whose ready-queue receives the TAO
     width: int    # resource width chosen for the TAO
+    impl: str = DEFAULT_IMPL  # implementation variant chosen for the TAO
 
 
 class SchedulerContext(Protocol):
@@ -60,6 +80,68 @@ class SchedulerContext(Protocol):
         one DAG namespace (criticalities are only comparable within a DAG)."""
         ...
 
+    def displacements(self, namespace: int = 0) -> int:
+        """How often this namespace's tenant has been preempted (displacement
+        history).  Policies damp width/impl aggressiveness as it grows."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# shared joint-decision helpers
+# ---------------------------------------------------------------------------
+def _variant_names(tao: TAO) -> tuple:
+    """Variant names the policy may choose from for this wake-up.
+
+    A preempted TAO's continuation is pinned to the variant it already ran
+    under — its chunk state is impl-specific, so switching mid-TAO would
+    resume the wrong payload.
+    """
+    cursor = tao.cursor
+    if cursor is not None and getattr(cursor, "next_chunk", 0) > 0:
+        return (tao.assigned_impl,)
+    return tao.impl_names()
+
+
+def _damp_level(tao: TAO, ctx: SchedulerContext) -> int:
+    """Width-halving / exploration-suppression level from displacement
+    history (0 = undamped; byte-identity for preemption-free runs)."""
+    fn = getattr(ctx, "displacements", None)
+    if fn is None:
+        return 0
+    return min(fn(tao.dag_id) // DAMP_DISPLACEMENTS, DAMP_MAX_LEVEL)
+
+
+def _clamp_width(spec: ClusterSpec, width: int) -> int:
+    """Round down to a valid power-of-two width (mirrors the core's clamp,
+    needed here so joint queries address real PTT cells)."""
+    widths = spec.widths
+    if width in widths:
+        return width
+    best = widths[0]
+    for w in widths:
+        if w <= width:
+            best = w
+    return best
+
+
+def _choose_impl(table: PTT, leader: int, width: int, names: Sequence[str],
+                 explore: bool) -> str:
+    """Pick a variant for a fixed (leader, width) cell.
+
+    ``explore=True``: untried variants first in declared order, then
+    EWMA-best (:meth:`PTT.best_impl`).  ``explore=False`` (damped tenants):
+    best among *tried* cells only, falling back to the first variant.
+    """
+    if explore:
+        impl, _t = table.best_impl(leader, width, names)
+        return impl if impl is not None else names[0]
+    best = (None, math.inf)
+    for nm in names:
+        t = table.time(leader, width, impl=nm)
+        if t > 0.0 and t < best[1]:
+            best = (nm, t)
+    return best[0] if best[0] is not None else names[0]
+
 
 class Policy:
     name = "abstract"
@@ -75,12 +157,23 @@ class Policy:
 # Base case: homogeneous DPA + random work stealing
 # ---------------------------------------------------------------------------
 class HomogeneousPolicy(Policy):
-    """The paper's baseline: wake up locally, rely on random stealing."""
+    """The paper's baseline: wake up locally, rely on random stealing.
+
+    With variants: the leader is fixed (local wake-up), so the joint decision
+    degenerates to :func:`_choose_impl` at the waker's place — no RNG, so
+    single-variant TAOs keep the draw-free legacy behaviour trivially."""
 
     name = "homogeneous"
 
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
-        return Placement(target=waker, width=tao.width_hint)
+        names = _variant_names(tao)
+        if len(names) == 1:
+            return Placement(target=waker, width=tao.width_hint, impl=names[0])
+        width = _clamp_width(ctx.spec, tao.width_hint)
+        leader = leader_of(waker % ctx.spec.n_workers, width)
+        impl = _choose_impl(ctx.ptt.table(tao.type), leader, width, names,
+                            explore=_damp_level(tao, ctx) == 0)
+        return Placement(target=waker, width=tao.width_hint, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +197,18 @@ class CriticalityAwarePolicy(Policy):
             pool = ctx.spec.big_workers or ctx.spec.little_workers
         else:
             pool = ctx.spec.little_workers or ctx.spec.big_workers
-        return Placement(target=ctx.rng.choice(pool), width=tao.width_hint)
+        target = ctx.rng.choice(pool)
+        names = _variant_names(tao)
+        if len(names) == 1:
+            return Placement(target=target, width=tao.width_hint,
+                             impl=names[0])
+        # joint decision at the drawn place: the cluster choice stays the
+        # criticality signal's; the variant adapts to that cluster's cells
+        width = _clamp_width(ctx.spec, tao.width_hint)
+        impl = _choose_impl(ctx.ptt.table(tao.type),
+                            leader_of(target, width), width, names,
+                            explore=_damp_level(tao, ctx) == 0)
+        return Placement(target=target, width=tao.width_hint, impl=impl)
 
 
 class CriticalityPTTPolicy(Policy):
@@ -115,12 +219,37 @@ class CriticalityPTTPolicy(Policy):
 
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
         width = tao.width_hint
+        names = _variant_names(tao)
+        if len(names) == 1:
+            if _is_critical(tao, ctx):
+                table = ctx.ptt.table(tao.type)
+                leader, _t = table.best_leader(width, impl=names[0])
+                if leader is not None:
+                    return Placement(target=leader, width=width,
+                                     impl=names[0])
+            return Placement(target=ctx.rng.randrange(ctx.spec.n_workers),
+                             width=width, impl=names[0])
+        table = ctx.ptt.table(tao.type)
+        explore = _damp_level(tao, ctx) == 0
+        cw = _clamp_width(ctx.spec, width)
         if _is_critical(tao, ctx):
-            table = ctx.ptt.table(tao.type)
-            leader, _t = table.best_leader(width)
+            # fully joint: best (impl, leader) cell for the width, untried
+            # cells first (impl-major) unless the tenant is damped
+            if explore:
+                impl, leader, _t = table.best_cell(cw, names)
+            else:
+                impl, leader = None, None
+                best_t = math.inf
+                for nm in names:
+                    cand, t = table.best_leader(cw, impl=nm)
+                    if cand is not None and 0.0 < t < best_t:
+                        impl, leader, best_t = nm, cand, t
             if leader is not None:
-                return Placement(target=leader, width=width)
-        return Placement(target=ctx.rng.randrange(ctx.spec.n_workers), width=width)
+                return Placement(target=leader, width=width, impl=impl)
+        target = ctx.rng.randrange(ctx.spec.n_workers)
+        impl = _choose_impl(table, leader_of(target, cw), cw, names,
+                            explore=explore)
+        return Placement(target=target, width=width, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -160,35 +289,54 @@ class WeightBasedPolicy(Policy):
                   threshold: float) -> bool:
         return weight > threshold
 
+    def _cluster_times(self, table: PTT, spec: ClusterSpec, width: int,
+                       impl: str) -> tuple:
+        """(t_big, t_little) for one variant, with the molded-width fallback:
+        under a molding wrapper the PTT only ever records the *molded*
+        widths, so the hinted width's rows can stay at zero forever — fall
+        back to the first width with data for both clusters (the
+        t_LITTLE/t_big speed ratio is what matters, not the absolute times
+        at the hinted width)."""
+        bigs, littles = spec.big_workers, spec.little_workers
+        t_big = table.cluster_time(bigs, width, impl=impl)
+        t_little = table.cluster_time(littles, width, impl=impl)
+        if t_big == 0.0 and t_little == 0.0:
+            for w in spec.widths:
+                tb = table.cluster_time(bigs, w, impl=impl)
+                tl = table.cluster_time(littles, w, impl=impl)
+                if tb > 0.0 and tl > 0.0:
+                    t_big, t_little = tb, tl
+                    break
+        return t_big, t_little
+
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
         width = tao.width_hint
         spec = ctx.spec
         bigs, littles = spec.big_workers, spec.little_workers
+        names = _variant_names(tao)
         if not bigs or not littles:  # homogeneous pool: nothing to bias
-            return Placement(target=waker, width=width)
+            return Placement(target=waker, width=width, impl=names[0])
         table = ctx.ptt.table(tao.type)
-        t_big = table.cluster_time(bigs, width)
-        t_little = table.cluster_time(littles, width)
-        if t_big == 0.0 and t_little == 0.0:
-            # Under a molding wrapper the PTT only ever records the *molded*
-            # widths, so the hinted width's rows can stay at zero forever —
-            # fall back to the first width with data for both clusters
-            # (the t_LITTLE/t_big speed ratio is what matters, not the
-            # absolute times at the hinted width).
-            for w in spec.widths:
-                tb = table.cluster_time(bigs, w)
-                tl = table.cluster_time(littles, w)
-                if tb > 0.0 and tl > 0.0:
-                    t_big, t_little = tb, tl
-                    break
+        if len(names) > 1:
+            return self._place_joint(tao, ctx, table, names, width)
+        impl = names[0]
+        t_big, t_little = self._cluster_times(table, spec, width, impl)
         # zero-init exploration: measure the untried cluster first
         if t_big == 0.0 and t_little == 0.0:
             pool = bigs if ctx.rng.random() < 0.5 else littles
-            return Placement(target=ctx.rng.choice(pool), width=width)
+            return Placement(target=ctx.rng.choice(pool), width=width,
+                             impl=impl)
         if t_big == 0.0:
-            return Placement(target=ctx.rng.choice(bigs), width=width)
+            return Placement(target=ctx.rng.choice(bigs), width=width,
+                             impl=impl)
         if t_little == 0.0:
-            return Placement(target=ctx.rng.choice(littles), width=width)
+            return Placement(target=ctx.rng.choice(littles), width=width,
+                             impl=impl)
+        return self._biased(tao, ctx, t_big, t_little, width, impl)
+
+    def _biased(self, tao: TAO, ctx: SchedulerContext, t_big: float,
+                t_little: float, width: int, impl: str) -> Placement:
+        """The weight-vs-threshold decision for fully-measured times."""
         weight = t_little / t_big
         # adaptive threshold: EWMA 1:6 toward the mean weight of the system.
         # Read and blend atomically (the decision below uses the pre-update
@@ -199,8 +347,57 @@ class WeightBasedPolicy(Policy):
             self._store_threshold(tao, (weight + self.OLD_WEIGHT * threshold)
                                   / (self.OLD_WEIGHT + 1))
         goes_big = self._goes_big(tao, ctx, weight, threshold)
-        pool = bigs if goes_big else littles
-        return Placement(target=ctx.rng.choice(pool), width=width)
+        pool = ctx.spec.big_workers if goes_big else ctx.spec.little_workers
+        return Placement(target=ctx.rng.choice(pool), width=width, impl=impl)
+
+    def _place_joint(self, tao: TAO, ctx: SchedulerContext, table: PTT,
+                     names: Sequence[str], width: int) -> Placement:
+        """Joint variant x cluster decision for multi-variant TAOs.
+
+        Exploration is impl-major in declared order (the per-variant analogue
+        of the zero-init branches above): the first variant missing a
+        cluster measurement gets measured there, unless the tenant is damped.
+        Once every variant has both cluster times, the variant whose *faster*
+        cluster is fastest wins, and its own t_LITTLE/t_big weight feeds the
+        shared threshold EWMA — so the big/LITTLE bias is always judged on
+        the times of the variant actually being placed.
+        """
+        spec = ctx.spec
+        bigs, littles = spec.big_workers, spec.little_workers
+        explore = _damp_level(tao, ctx) == 0
+        measured = []
+        for impl in names:
+            t_big, t_little = self._cluster_times(table, spec, width, impl)
+            if explore:
+                if t_big == 0.0 and t_little == 0.0:
+                    pool = bigs if ctx.rng.random() < 0.5 else littles
+                    return Placement(target=ctx.rng.choice(pool), width=width,
+                                     impl=impl)
+                if t_big == 0.0:
+                    return Placement(target=ctx.rng.choice(bigs), width=width,
+                                     impl=impl)
+                if t_little == 0.0:
+                    return Placement(target=ctx.rng.choice(littles),
+                                     width=width, impl=impl)
+            if t_big > 0.0 and t_little > 0.0:
+                measured.append((min(t_big, t_little), t_big, t_little, impl))
+        if not measured:
+            # damped and nothing fully measured: place the first variant as
+            # the single-variant path would, without exploring new cells
+            impl = names[0]
+            t_big, t_little = self._cluster_times(table, spec, width, impl)
+            if t_big > 0.0 and t_little > 0.0:
+                return self._biased(tao, ctx, t_big, t_little, width, impl)
+            if t_big == 0.0 and t_little == 0.0:
+                pool = bigs if ctx.rng.random() < 0.5 else littles
+            elif t_big == 0.0:
+                pool = bigs
+            else:
+                pool = littles
+            return Placement(target=ctx.rng.choice(pool), width=width,
+                             impl=impl)
+        _best, t_big, t_little, impl = min(measured)
+        return self._biased(tao, ctx, t_big, t_little, width, impl)
 
 
 # ---------------------------------------------------------------------------
@@ -310,20 +507,21 @@ class MoldingPolicy(Policy):
         return max(w, cur) if w > cur else cur
 
     def _history_based_width(self, tao: TAO, ctx: SchedulerContext,
-                             leader: int, cur: int) -> int:
+                             leader: int, cur: int,
+                             impl: str = DEFAULT_IMPL) -> int:
         table = ctx.ptt.table(tao.type)
         # the current width is itself a configuration to test: explore it
         # before hopping elsewhere (zero-init exploration, paper §3.1)
         if (cur in ctx.spec.widths
                 and leader_of(leader, cur) == leader
-                and table.untried(leader, cur)):
+                and table.untried(leader, cur, impl=impl)):
             return cur
-        best_w, best_cost = table.best_width(leader)
+        best_w, best_cost = table.best_width(leader, impl=impl)
         if best_w is None:
             return cur
         if best_cost == 0.0:     # some other width untried: explore it
             return best_w
-        t_cur = (table.time(leader, cur)
+        t_cur = (table.time(leader, cur, impl=impl)
                  if cur in ctx.spec.widths and leader_of(leader, cur) == leader
                  else 0.0)
         if t_cur == 0.0:
@@ -336,7 +534,26 @@ class MoldingPolicy(Policy):
         molded = self._load_based_width(tao, ctx, cur)
         if molded is None:
             leader = leader_of(base.target, cur)
-            molded = self._history_based_width(tao, ctx, leader, cur)
+            # fair-share/history sizing applies per chosen impl: the width
+            # that pays for itself under the ref variant may not under the
+            # Pallas one, so the (time*width) query reads the impl's cells
+            molded = self._history_based_width(tao, ctx, leader, cur,
+                                               impl=base.impl)
+        # chosen variant's declared width bounds (no-op for legacy TAOs)
+        lo, hi = tao.width_bounds(base.impl)
+        if hi > 0:
+            while molded > hi:
+                molded //= 2
+        while molded < lo and molded * 2 <= ctx.spec.max_width:
+            molded *= 2
+        # preemption-aware damping: a chronically-displaced tenant molds
+        # narrower (one halving per DAMP_DISPLACEMENTS displacements), so
+        # its continuations stop grabbing places it keeps losing.  Level 0
+        # (any preemption-free run) leaves the width untouched.
+        for _ in range(_damp_level(tao, ctx)):
+            if molded <= max(lo, 1):
+                break
+            molded //= 2
         # a preempted TAO's continuation (cursor mid-way) carries fewer
         # chunks than the original: never mold it wider than the chunks it
         # has left — extra members would join and find nothing to claim.
@@ -347,7 +564,7 @@ class MoldingPolicy(Policy):
             rem = max(1, cursor.unclaimed)
             while molded > rem:
                 molded //= 2
-        return Placement(target=base.target, width=molded)
+        return Placement(target=base.target, width=molded, impl=base.impl)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,8 @@
 """Performance Trace Table (PTT) — the paper's §3.1 contribution.
 
-One table per TAO *type*, organised ``(worker) x (width-index)``, recording an
-exponentially-weighted moving average of execution time with weight 1:4::
+One table per TAO *type*, organised ``(impl) x (worker) x (width-index)``,
+recording an exponentially-weighted moving average of execution time with
+weight 1:4::
 
     saved = (4 * old + new) / 5
 
@@ -16,13 +17,26 @@ include interference, DVFS and background load, policies built on it adapt to
 *temporal* heterogeneity too (paper §3.1, last paragraph).  The fleet runtime
 additionally uses it as a straggler detector (see ``repro.runtime_ft``).
 
+Implementation variants (arXiv:2108.13871)
+------------------------------------------
+A TAO may carry several interchangeable implementations (reference jax vs
+Pallas vs block-size variants) with different resource shapes; on
+big.LITTLE-style pools the best implementation differs per cluster class.  The
+table therefore keys its cells per ``(class, impl, width)``: every query and
+``record()`` takes an ``impl`` keyword (default: the single legacy variant,
+``DEFAULT_IMPL``), and each impl owns its own EWMA block *and* its own
+fast-query structures, so the PR-3 O(1) machinery is preserved per impl.  Two
+joint queries serve the decision layer: :meth:`best_impl` (best variant for a
+fixed leader) and :meth:`best_cell` (joint (impl, leader) minimum for a
+width, untried cells first in variant order).
+
 Constant-time queries (``fast_query``, default on)
 --------------------------------------------------
 The paper's pitch is that placement decisions are cheap table lookups, yet the
 obvious implementations of ``best_leader`` and ``cluster_time`` are
 O(n_workers) scans with per-element numpy scalar reads — the dominant cost of
-weight-based placement at fleet scale.  With ``fast_query=True`` the table
-maintains three incremental structures, updated on ``record()``:
+weight-based placement at fleet scale.  With ``fast_query=True`` each impl's
+block maintains three incremental structures, updated on ``record()``:
 
 * **per-(class, width) aggregates** — sum and count of tried cells, so
   ``cluster_time`` over a whole worker class is a ratio read.  The sums are
@@ -50,10 +64,11 @@ from __future__ import annotations
 import math
 import threading
 from fractions import Fraction
-from typing import Iterable
+from typing import Iterable, Sequence
 
 import numpy as np
 
+from .dag import DEFAULT_IMPL
 from .places import ClusterSpec, leader_of
 
 EWMA_OLD_WEIGHT = 4  # paper: saved = (4*old + new) / 5
@@ -83,37 +98,67 @@ def _mean_from_scaled(ssum: int, count: int) -> float:
     return float(Fraction(ssum, count << _SCALE_BITS))
 
 
-class PTT:
-    """Trace table for one TAO type."""
+class _ImplBlock:
+    """One impl's ``(worker) x (width)`` EWMA block plus fast-query state.
 
-    def __init__(self, spec: ClusterSpec, fast_query: bool = True):
-        self.spec = spec
-        self.fast_query = fast_query
+    Owned by a :class:`PTT`; all access is mediated (and locked) by the owner,
+    so the block itself is a plain bag of state.  Each impl having its *own*
+    aggregates/cursor/best-cache is what keeps every PR-3 O(1) invariant valid
+    per (class, impl) cell.
+    """
+
+    __slots__ = ("_t", "_n", "_cls_sum", "_cls_cnt", "_cursor", "_best")
+
+    def __init__(self, spec: ClusterSpec, fast_query: bool):
         self._t = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.float64)
         # Number of recorded samples per cell; used only for introspection /
         # straggler statistics, not by the paper's policies.
         self._n = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.int64)
+        if fast_query:
+            nw = len(spec.widths)
+            self._cls_sum = {c: [0] * nw for c in dict.fromkeys(spec.classes)}
+            self._cls_cnt = {c: [0] * nw for c in dict.fromkeys(spec.classes)}
+            self._cursor = [0] * nw            # first possibly-untried rank
+            # per width: (time, rank, worker) of the fastest tried leader, or
+            # None when unknown/invalidated (lazily recomputed on query)
+            self._best: list = [None] * nw
+
+
+class PTT:
+    """Trace table for one TAO type (all of its implementation variants)."""
+
+    def __init__(self, spec: ClusterSpec, fast_query: bool = True):
+        self.spec = spec
+        self.fast_query = fast_query
         self._lock = threading.Lock()
-        widths = spec.widths
         # eligible leaders per width index, in candidate (scan) order
-        self._eligible = [spec.eligible_leaders(w) for w in widths]
+        self._eligible = [spec.eligible_leaders(w) for w in spec.widths]
         if fast_query:
             # (class-group tuple, class) pairs for O(1) identity detection in
             # cluster_time: ClusterSpec caches workers_of(), so policies pass
             # the very same tuple object on every call.
             self._groups = tuple(
                 (spec.workers_of(c), c) for c in dict.fromkeys(spec.classes))
-            nw = len(widths)
-            self._cls_sum = {c: [0] * nw for c in dict.fromkeys(spec.classes)}
-            self._cls_cnt = {c: [0] * nw for c in dict.fromkeys(spec.classes)}
-            self._cursor = [0] * nw            # first possibly-untried rank
-            # per width: (time, rank, worker) of the fastest tried leader, or
-            # None when unknown/invalidated (lazily recomputed on query)
-            self._best: list[tuple[float, int, int] | None] = [None] * nw
+        # impl name -> its cell block; the legacy variant exists from birth so
+        # single-impl paths never pay the creation branch.
+        self._blocks: dict = {DEFAULT_IMPL: _ImplBlock(spec, fast_query)}
+
+    def _block(self, impl: str) -> _ImplBlock:
+        blk = self._blocks.get(impl)
+        if blk is None:
+            with self._lock:
+                blk = self._blocks.setdefault(
+                    impl, _ImplBlock(self.spec, self.fast_query))
+        return blk
+
+    def impls(self) -> tuple:
+        """Impl names with materialised cell blocks (recorded *or* queried)."""
+        return tuple(self._blocks)
 
     # -- recording ---------------------------------------------------------
-    def record(self, worker: int, width: int, elapsed: float) -> None:
-        """EWMA-record ``elapsed`` for (worker, width).
+    def record(self, worker: int, width: int, elapsed: float,
+               impl: str = DEFAULT_IMPL) -> None:
+        """EWMA-record ``elapsed`` for (impl, worker, width).
 
         ``worker`` must be the *leader* of the executing place; callers are
         responsible for the leader-only discipline (the runtime enforces it).
@@ -122,98 +167,110 @@ class PTT:
             raise ValueError(f"bad elapsed time {elapsed!r}")
         elapsed = max(elapsed, MIN_ELAPSED)  # keep the 0.0 untried sentinel
         wi = self.spec.width_index(width)
+        blk = self._block(impl)
         with self._lock:
-            old = float(self._t[worker, wi])
+            old = float(blk._t[worker, wi])
             if old == 0.0:
                 new = elapsed
             else:
                 new = (EWMA_OLD_WEIGHT * old + elapsed) / (
                     EWMA_OLD_WEIGHT + 1
                 )
-            self._t[worker, wi] = new
-            self._n[worker, wi] += 1
+            blk._t[worker, wi] = new
+            blk._n[worker, wi] += 1
             if self.fast_query:
-                self._update_aggregates(worker, wi, width, old, new)
+                self._update_aggregates(blk, worker, wi, width, old, new)
 
-    def _update_aggregates(self, worker: int, wi: int, width: int,
-                           old: float, new: float) -> None:
+    def _update_aggregates(self, blk: _ImplBlock, worker: int, wi: int,
+                           width: int, old: float, new: float) -> None:
         """O(1) incremental maintenance; caller holds the lock."""
         cls = self.spec.class_of(worker)
-        self._cls_sum[cls][wi] += _to_scaled(new) - (
+        blk._cls_sum[cls][wi] += _to_scaled(new) - (
             _to_scaled(old) if old != 0.0 else 0)
         if old == 0.0:
-            self._cls_cnt[cls][wi] += 1
+            blk._cls_cnt[cls][wi] += 1
         # best-leader cache: only eligible-leader rows participate
         if worker % width or worker + width > self.spec.n_workers:
             return
         rank = worker // width
-        best = self._best[wi]
+        best = blk._best[wi]
         if best is None:
             return                     # already dirty; recomputed on query
         t_b, r_b, w_b = best
         if worker == w_b:
             if new <= t_b:
-                self._best[wi] = (new, r_b, w_b)   # improved: still the best
+                blk._best[wi] = (new, r_b, w_b)   # improved: still the best
             else:
-                self._best[wi] = None              # worsened: lazy recompute
+                blk._best[wi] = None              # worsened: lazy recompute
         elif (new, rank) < (t_b, r_b):
-            self._best[wi] = (new, rank, worker)
+            blk._best[wi] = (new, rank, worker)
 
     # -- queries -----------------------------------------------------------
-    def time(self, worker: int, width: int) -> float:
+    def time(self, worker: int, width: int, impl: str = DEFAULT_IMPL) -> float:
         """Recorded EWMA time; 0.0 means untried."""
-        return float(self._t[worker, self.spec.width_index(width)])
+        blk = self._blocks.get(impl)
+        if blk is None:
+            return 0.0
+        return float(blk._t[worker, self.spec.width_index(width)])
 
-    def samples(self, worker: int, width: int) -> int:
-        return int(self._n[worker, self.spec.width_index(width)])
+    def samples(self, worker: int, width: int,
+                impl: str = DEFAULT_IMPL) -> int:
+        blk = self._blocks.get(impl)
+        if blk is None:
+            return 0
+        return int(blk._n[worker, self.spec.width_index(width)])
 
-    def untried(self, worker: int, width: int) -> bool:
-        return self.time(worker, width) == 0.0
+    def untried(self, worker: int, width: int,
+                impl: str = DEFAULT_IMPL) -> bool:
+        return self.time(worker, width, impl=impl) == 0.0
 
-    def best_leader(self, width: int, candidates: Iterable[int] | None = None):
-        """Fastest recorded leader for ``width``; untried leaders (0) come
-        first so every configuration gets explored (paper: zero-init).
+    def best_leader(self, width: int, candidates: Iterable[int] | None = None,
+                    impl: str = DEFAULT_IMPL):
+        """Fastest recorded leader for ``(impl, width)``; untried leaders (0)
+        come first so every configuration gets explored (paper: zero-init).
 
         Returns ``(leader, time)`` where time==0.0 flags an untried pick, or
         ``(None, inf)`` when there are no candidates.
         """
         wi = self.spec.width_index(width)
+        blk = self._block(impl)
         if self.fast_query and candidates is None:
-            return self._best_leader_fast(wi)
+            return self._best_leader_fast(blk, wi)
         if candidates is None:
             candidates = self._eligible[wi]
-        best: tuple[int | None, float] = (None, math.inf)
+        best = (None, math.inf)
         for c in candidates:
             if leader_of(c, width) != c:
                 continue  # not an eligible leader for this width
-            t = float(self._t[c, wi])
+            t = float(blk._t[c, wi])
             if t == 0.0:
                 return (c, 0.0)  # force exploration
             if t < best[1]:
                 best = (c, t)
         return best
 
-    def _best_leader_fast(self, wi: int):
+    def _best_leader_fast(self, blk: _ImplBlock, wi: int):
         """Amortized-O(1) best_leader: untried cursor, then the lazy cache."""
         elig = self._eligible[wi]
         if not elig:
             return (None, math.inf)
         with self._lock:
-            cur = self._cursor[wi]
-            t_col = self._t[:, wi]
+            cur = blk._cursor[wi]
+            t_col = blk._t[:, wi]
             while cur < len(elig) and t_col[elig[cur]] != 0.0:
                 cur += 1               # cells never revert to untried:
-            self._cursor[wi] = cur     # the cursor only ever advances
+            blk._cursor[wi] = cur      # the cursor only ever advances
             if cur < len(elig):
                 return (elig[cur], 0.0)
-            best = self._best[wi]
+            best = blk._best[wi]
             if best is None:           # invalidated: rescan this width only
                 best = min((float(t_col[c]), r, c)
                            for r, c in enumerate(elig))
-                self._best[wi] = best
+                blk._best[wi] = best
             return (best[2], best[0])
 
-    def cluster_time(self, workers: Iterable[int], width: int) -> float:
+    def cluster_time(self, workers: Iterable[int], width: int,
+                     impl: str = DEFAULT_IMPL) -> float:
         """Mean recorded time over a set of workers at ``width`` (0 if none).
 
         Used by weight-based scheduling to estimate the per-class execution
@@ -224,21 +281,23 @@ class PTT:
         exact-integer mean.
         """
         wi = self.spec.width_index(width)
+        blk = self._block(impl)
         if self.fast_query:
             for group, cls in self._groups:
                 if workers is group:
                     with self._lock:
-                        return _mean_from_scaled(self._cls_sum[cls][wi],
-                                                 self._cls_cnt[cls][wi])
+                        return _mean_from_scaled(blk._cls_sum[cls][wi],
+                                                 blk._cls_cnt[cls][wi])
         ssum, cnt = 0, 0
         for w in workers:
-            t = float(self._t[w, wi])
+            t = float(blk._t[w, wi])
             if t > 0.0:
                 ssum += _to_scaled(t)
                 cnt += 1
         return _mean_from_scaled(ssum, cnt)
 
-    def best_width(self, leader: int, widths: Iterable[int] | None = None):
+    def best_width(self, leader: int, widths: Iterable[int] | None = None,
+                   impl: str = DEFAULT_IMPL):
         """History-based molding query (paper §3.3).
 
         Looks *within the leader's row* for the width with the best
@@ -249,11 +308,11 @@ class PTT:
         """
         if widths is None:
             widths = self.spec.widths
-        best: tuple[int | None, float] = (None, math.inf)
+        best = (None, math.inf)
         for w in widths:
             if leader_of(leader, w) != leader:
                 continue  # this worker cannot lead at width w
-            t = self.time(leader, w)
+            t = self.time(leader, w, impl=impl)
             if t == 0.0:
                 return (w, 0.0)
             cost = t * w
@@ -261,8 +320,63 @@ class PTT:
                 best = (w, cost)
         return best
 
-    def snapshot(self) -> np.ndarray:
-        return self._t.copy()
+    # -- joint (impl, ...) queries ----------------------------------------
+    def best_impl(self, leader: int, width: int, impls: Sequence[str]):
+        """Best variant for a fixed ``(leader, width)`` cell.
+
+        Untried variants come first, in the TAO's declared variant order (the
+        per-impl analogue of zero-init exploration); otherwise the minimum
+        EWMA time wins with first-wins strict ``<`` over that same order.
+        Returns ``(impl, time)`` with time==0.0 flagging exploration.
+        """
+        best = (None, math.inf)
+        for name in impls:
+            t = self.time(leader, width, impl=name)
+            if t == 0.0:
+                return (name, 0.0)
+            if t < best[1]:
+                best = (name, t)
+        return best
+
+    def best_cell(self, width: int, impls: Sequence[str],
+                  candidates: Iterable[int] | None = None):
+        """Joint ``(impl, leader)`` minimum for ``width``.
+
+        Exploration is impl-major: the first variant (in declared order) with
+        an untried eligible leader is returned with that leader and time 0.0.
+        Once every (impl, leader) cell at this width is tried, the minimum
+        ``(time, impl-rank)`` wins — each impl's candidate contributed by the
+        per-impl ``best_leader`` machinery, so the joint query stays amortized
+        O(#impls).  Returns ``(impl, leader, time)`` or ``(None, None, inf)``
+        when no variant has an eligible leader.
+        """
+        best = (None, None, math.inf)
+        for name in impls:
+            leader, t = self.best_leader(width, candidates=candidates,
+                                         impl=name)
+            if leader is None:
+                continue
+            if t == 0.0:
+                return (name, leader, 0.0)
+            if t < best[2]:
+                best = (name, leader, t)
+        return best
+
+    # -- lifecycle ---------------------------------------------------------
+    def reset(self) -> None:
+        """Forget every recorded sample (all impls), back to the zero-init
+        exploration state.  Benchmark harnesses call this between A/B legs so
+        profiles learned in one leg cannot leak into the next."""
+        with self._lock:
+            self._blocks = {DEFAULT_IMPL: _ImplBlock(self.spec,
+                                                     self.fast_query)}
+
+    def snapshot(self, impl: str = DEFAULT_IMPL) -> np.ndarray:
+        blk = self._blocks.get(impl)
+        if blk is None:
+            return np.zeros((self.spec.n_workers, len(self.spec.widths)),
+                            dtype=np.float64)
+        return blk._t.copy()
 
 
 class PTTRegistry:
@@ -287,3 +401,11 @@ class PTTRegistry:
 
     def types(self) -> tuple[str, ...]:
         return tuple(self._tables)
+
+    def reset(self) -> None:
+        """Reset every existing table in place (held references stay valid
+        and come back zero-initialised)."""
+        with self._lock:
+            tables = tuple(self._tables.values())
+        for tbl in tables:
+            tbl.reset()

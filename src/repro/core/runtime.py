@@ -316,7 +316,8 @@ class ThreadedRuntime:
                 self._trace.append(TraceRecord(
                     tao.id, tao.type, ex.leader, ex.width,
                     ex.start_time - self._t0, now_rel, tuple(ex.members),
-                    dag_id=tao.dag_id, preempted=True))
+                    dag_id=tao.dag_id, preempted=True,
+                    impl=tao.assigned_impl))
                 st = self._wl_stats.get(tao.dag_id)
                 if st is not None:
                     st.record_preemption()
@@ -328,8 +329,12 @@ class ThreadedRuntime:
         width = tao.assigned_width
         leader = leader_of(popper, width)
         # the *popper* determines the real place (a steal moves the TAO), so
-        # this — not admission — is where the leader becomes truthful
+        # this — not admission — is where the leader becomes truthful; the
+        # impl follows the same rule for multi-variant TAOs (re-picked for
+        # the realized leader's cells; single-variant TAOs and continuations
+        # pass through unchanged)
         tao.assigned_leader = leader
+        self.core.rebind_impl(tao, leader)
         ex = _TaoExec(tao, leader, width, self.spec.n_workers)
         ex.start_time = time.perf_counter()
         if self._preempt is not None:
@@ -357,7 +362,13 @@ class ThreadedRuntime:
 
     # ------------------------------------------------------------- worker loop
     def _execute_chunks(self, ex: _TaoExec, worker: int) -> None:
-        work: ChunkedWork = ex.tao.work or ChunkedWork(lambda i: None, 1)
+        # dispatch the variant chosen at admit time; payload_for falls back
+        # to TAO.work for legacy single-variant TAOs.  Variant payloads
+        # share the TAO's chunk structure (the ChunkCursor is
+        # variant-agnostic), so a continuation resumes the same impl's
+        # chunks — admit pins assigned_impl for continuations.
+        work: ChunkedWork = (ex.tao.payload_for(ex.tao.assigned_impl)
+                             or ChunkedWork(lambda i: None, 1))
         cursor = ex.cursor
         is_leader = worker == ex.leader
         if is_leader:
@@ -417,7 +428,7 @@ class ThreadedRuntime:
             self._trace.append(TraceRecord(
                 tao.id, tao.type, ex.leader, ex.width,
                 ex.start_time - self._t0, end_rel, tuple(ex.members),
-                dag_id=tao.dag_id))
+                dag_id=tao.dag_id, impl=tao.assigned_impl))
             st = self._wl_stats.get(tao.dag_id)
             if st is not None:
                 st.record_completion(end_rel)
@@ -641,10 +652,14 @@ class ThreadedRuntime:
         total = workload.total_taos()
         self._begin_run(total)
         self._gate = admission
+        tenant_of = {a.dag_id: a.tenant for a in arrivals}
+        # displacement damping aggregates per tenant (reset_counters in
+        # _begin_run cleared the previous run's mapping and history)
+        self.core.set_tenants(tenant_of)
         if preemption is not None:
             preemption.prepare(self.spec)
             preemption.reset()
-            self._tenant_of = {a.dag_id: a.tenant for a in arrivals}
+            self._tenant_of = tenant_of
         self._preempt = preemption
         stats = {
             a.dag_id: DagStats.for_arrival(a.dag_id, a.name, a.at,

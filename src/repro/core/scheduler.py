@@ -100,6 +100,7 @@ class SchedulerCore:
         # fast_query=False keeps the PTT's O(n_workers) scan queries — only
         # useful as the baseline in perf/parity tests (mirrors fast_dispatch)
         self.ptt = PTTRegistry(spec, fast_query=fast_query)
+        self._seed = seed
         self.rng = random.Random(seed)
         # one criticality multiset per DAG namespace: concurrent tenants must
         # not drown each other's critical paths (a small DAG's root is still
@@ -108,6 +109,12 @@ class SchedulerCore:
         self._in_flight = 0           # ready+running TAOs (molding load signal)
         self._in_flight_ns: dict[int, int] = {}   # per-namespace breakdown
         self._completed = 0
+        # displacement history (preemption-aware damping input): how often
+        # each namespace — and, when a dag_id->tenant mapping is installed,
+        # each tenant — has had a running TAO released at a chunk boundary
+        self._displaced_ns: dict[int, int] = {}
+        self._displaced_tenant: dict[str, int] = {}
+        self._tenant_of: dict[int, str] = {}
         self._lock = threading.RLock()
 
     # -- SchedulerContext ----------------------------------------------------
@@ -136,6 +143,27 @@ class SchedulerCore:
         with self._lock:
             ms = self._crit.get(namespace)
             return ms.max() if ms is not None else 0
+
+    def displacements(self, namespace: int = 0) -> int:
+        """Displacement history for one namespace's tenant.
+
+        When :meth:`set_tenants` installed a dag_id->tenant mapping (the
+        workload runners do), the count aggregates over every DAG of the
+        same tenant — a serving tenant whose requests keep getting preempted
+        is *chronically* displaced even though each individual request only
+        loses once.  Policies damp width/impl aggressiveness on this signal
+        (see ``policies._damp_level``)."""
+        with self._lock:
+            tenant = self._tenant_of.get(namespace)
+            if tenant is not None:
+                return self._displaced_tenant.get(tenant, 0)
+            return self._displaced_ns.get(namespace, 0)
+
+    def set_tenants(self, mapping: dict) -> None:
+        """Install (merge) a ``dag_id -> tenant name`` mapping so displacement
+        history aggregates per tenant across that tenant's DAGs."""
+        with self._lock:
+            self._tenant_of.update(mapping)
 
     def admission_signals(self) -> LoadSignals:
         """One internally-consistent load snapshot for admission gates
@@ -168,8 +196,15 @@ class SchedulerCore:
         placement = self.policy.place(tao, self, waker)
         width = self._clamp_width(placement.width)
         target = placement.target % self.spec.n_workers
+        # a continuation's chunk state is impl-specific: keep the variant it
+        # already ran under (policies pin it too; this is the backstop)
+        cursor = tao.cursor
+        is_continuation = cursor is not None and \
+            getattr(cursor, "next_chunk", 0) > 0
+        impl = tao.assigned_impl if is_continuation else placement.impl
         with self._lock:
             tao.assigned_width = width
+            tao.assigned_impl = impl
             # assigned_leader stays -1 here: the real place is derived from
             # the *popper* at DPA time (a steal moves it), so the vehicles
             # stamp it when the TAO is actually distributed/started.
@@ -180,7 +215,7 @@ class SchedulerCore:
             self._in_flight += 1
             self._in_flight_ns[tao.dag_id] = \
                 self._in_flight_ns.get(tao.dag_id, 0) + 1
-            return Placement(target=target, width=width)
+            return Placement(target=target, width=width, impl=impl)
 
     def _retire_locked(self, tao: TAO) -> None:
         """Undo ``admit``-time accounting (caller holds ``_lock``): the TAO
@@ -214,6 +249,13 @@ class SchedulerCore:
             # meaningless (that is the point of preempting), so the leader
             # reverts to the not-yet-distributed sentinel
             tao.assigned_leader = -1
+            # displacement history: feed preemption-aware damping
+            self._displaced_ns[tao.dag_id] = \
+                self._displaced_ns.get(tao.dag_id, 0) + 1
+            tenant = self._tenant_of.get(tao.dag_id)
+            if tenant is not None:
+                self._displaced_tenant[tenant] = \
+                    self._displaced_tenant.get(tenant, 0) + 1
 
     def commit_and_wakeup(self, tao: TAO) -> list[TAO]:
         """Paper §3.2: executed by the last core completing a TAO.  Returns
@@ -244,10 +286,55 @@ class SchedulerCore:
             self._in_flight = 0
             self._in_flight_ns.clear()
             self._crit.clear()
+            # displacement history is per-run adaptive state, not a learned
+            # profile: a fresh run starts undamped
+            self._displaced_ns.clear()
+            self._displaced_tenant.clear()
+            self._tenant_of.clear()
+
+    def reset_learning(self, seed: int | None = None) -> None:
+        """Forget everything *learned* — PTT profiles (all impls), adaptive
+        policy state — zero the per-run counters and restart the RNG stream
+        (from the construction seed unless overridden).  The benchmark
+        harness calls this between A/B legs so profiles learned in one leg
+        cannot leak into the next: a leg run after ``reset_learning`` is
+        byte-identical to one on a freshly-built core."""
+        self.ptt.reset()
+        self.policy.reset()
+        self.reset_counters()
+        with self._lock:
+            self.rng = random.Random(self._seed if seed is None else seed)
+
+    def rebind_impl(self, tao: TAO, leader: int) -> str:
+        """Execution-layer refinement of the joint (impl, width, leader)
+        decision: work stealing may start a TAO on a *different* leader than
+        the one its variant was chosen for, and on a heterogeneous pool the
+        best variant differs per cluster — so the popper re-picks the variant
+        for the realized ``(leader, width)`` cell just before execution.
+
+        Single-variant TAOs return unchanged (byte-identity), and so do
+        continuations (chunk state is impl-specific; ``_variant_names`` pins
+        them to the impl they started under).  Damped tenants (displacement
+        history) stop exploring untried cells here exactly as at admit."""
+        from .policies import (DAMP_DISPLACEMENTS, _choose_impl,
+                               _variant_names)
+
+        names = _variant_names(tao)
+        if len(names) <= 1:
+            impl = names[0] if names else tao.assigned_impl
+            return impl
+        explore = self.displacements(tao.dag_id) < DAMP_DISPLACEMENTS
+        impl = _choose_impl(self.ptt.table(tao.type), leader,
+                            tao.assigned_width, names, explore)
+        with self._lock:
+            tao.assigned_impl = impl
+        return impl
 
     def record_time(self, tao: TAO, leader: int, width: int, elapsed: float) -> None:
-        """Leader-only PTT update (the vehicles enforce leader discipline)."""
-        self.ptt.table(tao.type).record(leader, width, elapsed)
+        """Leader-only PTT update into the TAO's (class, impl, width) cell
+        (the vehicles enforce leader discipline)."""
+        self.ptt.table(tao.type).record(leader, width, elapsed,
+                                        impl=tao.assigned_impl)
 
     # -- helpers ----------------------------------------------------------------
     def _clamp_width(self, width: int) -> int:

@@ -233,17 +233,27 @@ class ServeStats:
 
 
 def ptt_profiles(core) -> dict:
-    """Snapshot the learned (class, width) profiles out of a scheduler core:
-    ``{tao_type: {(leader, width): ewma_seconds}}`` over tried cells only."""
+    """Snapshot the learned profiles out of a scheduler core, tried cells
+    only: ``{tao_type: {(leader, width): ewma_seconds}}`` for the implicit
+    single-implementation case, with ``(leader, width, impl)`` keys for any
+    non-default implementation variant the table has measured (multi-impl
+    TAOs record into per-(class, impl) cells — see
+    :meth:`repro.core.ptt.PTT.best_impl`)."""
+    from .dag import DEFAULT_IMPL
+
     out: dict[str, dict] = {}
     for typ in core.ptt.types():
-        snap = core.ptt.table(typ).snapshot()
+        table = core.ptt.table(typ)
         cells = {}
-        for wi, width in enumerate(core.spec.widths):
-            for worker in range(core.spec.n_workers):
-                t = float(snap[worker, wi])
-                if t > 0.0:
-                    cells[(worker, width)] = t
+        for impl in table.impls():
+            snap = table.snapshot(impl=impl)
+            for wi, width in enumerate(core.spec.widths):
+                for worker in range(core.spec.n_workers):
+                    t = float(snap[worker, wi])
+                    if t > 0.0:
+                        key = ((worker, width) if impl == DEFAULT_IMPL
+                               else (worker, width, impl))
+                        cells[key] = t
         out[typ] = cells
     return out
 

@@ -74,7 +74,7 @@ import random
 from collections import deque
 from typing import Callable
 
-from .dag import TAO, TaoDag
+from .dag import DEFAULT_IMPL, TAO, TaoDag
 from .places import BIG, LITTLE, ClusterSpec, leader_of, place_members
 from .policies import Policy
 from .preemption import RunningView, ensure_cursor, sorted_views
@@ -155,6 +155,9 @@ class TraceRecord:
     # True for a segment truncated at a chunk boundary by preemption; the
     # TAO's remaining chunks appear as later records with the same tao_id
     preempted: bool = False
+    # implementation variant the segment executed under (DEFAULT_IMPL for
+    # legacy single-variant TAOs)
+    impl: str = DEFAULT_IMPL
 
 
 @dataclasses.dataclass
@@ -303,6 +306,7 @@ class Simulator:
         self.core = SchedulerCore(spec, policy, seed=seed,
                                   fast_query=fast_query)
         self.models = kernel_models or paper_kernel_models()
+        self._seed = seed
         self.rng = random.Random(seed ^ 0x5EED)
         # dynamic per-worker speed multipliers (straggler injection)
         self.speed_mult = [1.0] * spec.n_workers
@@ -313,6 +317,25 @@ class Simulator:
         # schedule byte-identically to the fast ones — they exist only as
         # the baselines the perf suite (benchmarks/perf.py) measures against.
         self.fast_dispatch = fast_dispatch
+
+    def _model_for(self, type_: str, impl: str) -> KernelModel:
+        """Per-impl cost curve: ``models[(type, impl)]`` when calibrated,
+        else the type's shared model (single-variant runs never pay more
+        than one failed dict probe)."""
+        m = self.models.get((type_, impl))
+        if m is not None:
+            return m
+        return self.models[type_]
+
+    def reset_learning(self, seed: int | None = None) -> None:
+        """A/B-leg reset: forget learned PTT profiles and adaptive policy
+        state, restart *both* RNG streams (core + dispatch), so a run after
+        this is byte-identical to one on a freshly-built Simulator.
+        Fault/straggler state deliberately survives — it models the
+        hardware; call :meth:`reset_faults` separately for pristine metal."""
+        s = self._seed if seed is None else seed
+        self.core.reset_learning(s)
+        self.rng = random.Random(s ^ 0x5EED)
 
     # -- fault/straggler injection (used by runtime_ft tests) ---------------
     # NOTE: fault state deliberately survives reruns of the same Simulator —
@@ -415,6 +438,9 @@ class Simulator:
         counted: set[int] = set()          # id(req) of counted delays
         tenant_of = {dag_id: tenant
                      for _, dag_id, _, _, tenant, _, _ in arrivals}
+        # displacement damping aggregates per tenant (reset_counters above
+        # cleared the previous run's mapping and history)
+        self.core.set_tenants(tenant_of)
         if ctrl is not None:
             ctrl.prepare(self.spec)
             ctrl.reset()
@@ -454,13 +480,18 @@ class Simulator:
 
         def start_tao(tao: TAO, popper: int, t0: float) -> None:
             nonlocal busy_acc, occupied_slots
-            model = self.models[tao.type]
             width = tao.assigned_width
             leader = leader_of(popper, width)
             # the popper (possibly a stealer) fixes the real place; admission
             # leaves assigned_leader at -1 so trace consumers never see a
             # leader the steal invalidated
             tao.assigned_leader = leader
+            # ...and, for multi-variant TAOs, re-picks the variant for the
+            # realized leader (a steal may have moved the TAO to the cluster
+            # the admit-time impl was NOT chosen for; no-op on single-variant
+            # TAOs and continuations, so legacy schedules stay byte-identical)
+            model = self._model_for(tao.type,
+                                    self.core.rebind_impl(tao, leader))
             members = [m for m in place_members(leader, width)
                        if m < n_workers and m not in self.failed]
             if not members:
@@ -539,7 +570,8 @@ class Simulator:
                 free_time[m] = t_end
                 idle.discard(m)
             rec = TraceRecord(tao.id, tao.type, leader, width,
-                              t0, t_end, tuple(chosen), dag_id=tao.dag_id)
+                              t0, t_end, tuple(chosen), dag_id=tao.dag_id,
+                              impl=tao.assigned_impl)
             running[tao] = rec
             if fast:
                 # key by the clusters the *chosen* participants touch — the

@@ -1,0 +1,14 @@
+"""jax version-compatibility shims shared by the Pallas kernel modules.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; resolving
+the name here keeps every kernel importable (and runnable in interpret mode on
+CPU-only hosts) on either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - future-proofing
+    raise ImportError("no Pallas TPU CompilerParams class in this jax")

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _bitonic_stage(x: jax.Array, k: int, j: int) -> jax.Array:
     """One compare-exchange stage on rows; x: (rows, n)."""
@@ -63,7 +65,7 @@ def sort_rows(x: jax.Array, *, block_rows: int = 8, interpret: bool = False):
         in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

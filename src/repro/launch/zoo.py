@@ -30,7 +30,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..core.dag import TAO
+from ..core.dag import TAO, ImplVariant
 from ..core.runtime import ChunkedWork
 from ..core.serve_orchestrator import ServeRequest
 
@@ -55,13 +55,21 @@ class ZooTenant:
 
     def __init__(self, name: str, flavor: str = "kernel",
                  slab_tokens: int = 1024, decode_steps: int = 1,
-                 seed: int = 0):
+                 seed: int = 0, multi_impl: bool = False):
         if flavor not in FLAVORS:
             raise ValueError(f"unknown flavor {flavor!r}; known: {FLAVORS}")
         self.name = name
         self.flavor = flavor
         self.slab_tokens = max(1, int(slab_tokens))
         self.decode_steps = max(1, int(decode_steps))
+        # multi_impl: bind every host-available kernel implementation
+        # (ops.available_impls()) as TAO variants, so the scheduler picks
+        # the impl jointly with (leader, width).  Kernel flavor only — the
+        # model flavors run jitted whole-model payloads with no variant
+        # axis.  Off by default: single-variant tenants schedule
+        # byte-identically to the pre-variant zoo.
+        self.multi_impl = bool(multi_impl) and flavor == "kernel"
+        self._impl_payloads: dict = {}
         if flavor == "kernel":
             self._build_kernel_payloads(seed)
         else:
@@ -81,19 +89,33 @@ class ZooTenant:
         cache_slab = jax.random.normal(k3, (4 * S, H * D), jnp.float32)
         x1 = jax.random.normal(k0, (1, H * D), jnp.float32)
 
-        def prefill_slab() -> None:
-            attn = ops.flash_attention(q, kv, kv)
-            y = ops.matmul(attn.reshape(S, H * D), w)
-            jax.block_until_ready(y)
+        def make_prefill(attn_op, mm_op) -> Callable[[], None]:
+            def prefill_slab() -> None:
+                attn = attn_op(q, kv, kv)
+                y = mm_op(attn.reshape(S, H * D), w)
+                jax.block_until_ready(y)
+            return prefill_slab
 
-        def decode_burst() -> None:
-            for _ in range(self.decode_steps):
-                moved = ops.copy(cache_slab)
-                y = ops.matmul(x1, w)
-                jax.block_until_ready((moved, y))
+        def make_decode(copy_op) -> Callable[[], None]:
+            # the burst's GEMV is a single row — below the Pallas matmul's
+            # tile granularity — so a variant only swaps the copy kernel (the
+            # class-defining op) and the GEMV stays on auto dispatch
+            def decode_burst() -> None:
+                for _ in range(self.decode_steps):
+                    moved = copy_op(cache_slab)
+                    y = ops.matmul(x1, w)
+                    jax.block_until_ready((moved, y))
+            return decode_burst
 
-        self.prefill_slab = prefill_slab
-        self.decode_burst = decode_burst
+        # default payloads keep auto dispatch (force=None): byte-identical
+        # single-variant behavior when multi_impl is off
+        self.prefill_slab = make_prefill(ops.flash_attention, ops.matmul)
+        self.decode_burst = make_decode(ops.copy)
+        if self.multi_impl:
+            for im in ops.available_impls():
+                self._impl_payloads[im.name] = (
+                    make_prefill(im.op("flash_attention"), im.op("matmul")),
+                    make_decode(im.op("copy")))
 
     def _build_model_payloads(self, arch: str, seed: int) -> None:
         from ..configs import get_smoke_config
@@ -125,30 +147,47 @@ class ZooTenant:
 
     # -- serving interface ----------------------------------------------
     def warm(self) -> None:
-        """Compile both payloads now, off the worker threads."""
+        """Compile all payloads now, off the worker threads."""
         self.prefill_slab()
         self.decode_burst()
+        for pf, df in self._impl_payloads.values():
+            pf()
+            df()
 
     def prefill_chunks(self, r: ServeRequest) -> int:
         return max(1, math.ceil(r.prompt_len / self.slab_tokens))
 
     def bind(self, tao: TAO, r: ServeRequest) -> None:
-        """Attach this tenant's ChunkedWork payload to one serving TAO."""
-        if tao.type == "prefill":
-            tao.work = ChunkedWork(lambda i: self.prefill_slab(),
-                                   self.prefill_chunks(r))
-        else:
-            tao.work = ChunkedWork(lambda i: self.decode_burst(), 1)
+        """Attach this tenant's ChunkedWork payload to one serving TAO.
+
+        With ``multi_impl`` the TAO additionally carries one
+        :class:`~repro.core.dag.ImplVariant` per host-available kernel
+        implementation (identical chunk structure — the ChunkCursor is
+        variant-agnostic), and the policies choose which one executes."""
+        n = self.prefill_chunks(r) if tao.type == "prefill" else 1
+        which = 0 if tao.type == "prefill" else 1
+        fn = self.prefill_slab if which == 0 else self.decode_burst
+        tao.work = ChunkedWork(lambda i, fn=fn: fn(), n)
+        if self._impl_payloads:
+            tao.impls = tuple(
+                ImplVariant(name, ChunkedWork(lambda i, fn=fns[which]: fn(),
+                                              n))
+                for name, fns in self._impl_payloads.items())
+            tao.assigned_impl = tao.impls[0].name
 
 
 def default_zoo(flavors: dict | None = None, slab_tokens: int = 1024,
-                decode_steps: int = 1, seed: int = 0) -> dict:
+                decode_steps: int = 1, seed: int = 0,
+                multi_impl: bool = False) -> dict:
     """``tenant name -> ZooTenant``.  Default pairing mirrors the bursty
     trace: the latency-sensitive ``steady`` tenant serves a transformer,
-    the ``burst`` tenant hammers the raw Pallas-class kernels."""
+    the ``burst`` tenant hammers the raw Pallas-class kernels.
+    ``multi_impl=True`` lets kernel-flavor tenants expose every
+    host-available implementation as schedulable TAO variants."""
     flavors = flavors or {"steady": "transformer", "burst": "kernel"}
     return {name: ZooTenant(name, flavor=fl, slab_tokens=slab_tokens,
-                            decode_steps=decode_steps, seed=seed + i)
+                            decode_steps=decode_steps, seed=seed + i,
+                            multi_impl=multi_impl)
             for i, (name, fl) in enumerate(flavors.items())}
 
 

@@ -73,6 +73,50 @@ def test_fast_ptt_property_equals_from_scratch():
     prop()
 
 
+def test_fast_ptt_property_equals_from_scratch_per_impl():
+    """The same property with the implementation dimension in play: records
+    and queries scattered over (impl, worker, width) cells must keep every
+    impl's incremental aggregates, untried cursor and best-leader cache
+    exactly equal to the scan recompute — each impl block owns its own
+    fast-query state, and cross-impl traffic must never perturb it."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core import DEFAULT_IMPL
+
+    specs = (hikey960(), fleet(5, 3), homogeneous(4))
+    impls = (DEFAULT_IMPL, "ref", "pallas")
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def prop(data):
+        spec = data.draw(st.sampled_from(specs))
+        fast, slow = PTT(spec), PTT(spec, fast_query=False)
+        n_ops = data.draw(st.integers(1, 40))
+        for _ in range(n_ops):
+            impl = data.draw(st.sampled_from(impls))
+            worker = data.draw(st.integers(0, spec.n_workers - 1))
+            width = data.draw(st.sampled_from(spec.widths))
+            elapsed = data.draw(st.floats(0.0, 1e6, allow_nan=False))
+            fast.record(worker, width, elapsed, impl=impl)
+            slow.record(worker, width, elapsed, impl=impl)
+            probe = data.draw(st.sampled_from(impls))
+            assert fast.samples(worker, width, impl=impl) == \
+                slow.samples(worker, width, impl=impl)
+            assert fast.untried(worker, width, impl=probe) == \
+                slow.untried(worker, width, impl=probe)
+            for w in spec.widths:
+                # exact equality per impl, plus the joint queries built on it
+                assert fast.best_leader(w, impl=probe) == \
+                    slow.best_leader(w, impl=probe)
+                assert fast.best_cell(w, impls) == slow.best_cell(w, impls)
+                for group in (spec.big_workers, spec.little_workers):
+                    assert fast.cluster_time(group, w, impl=probe) == \
+                        slow.cluster_time(group, w, impl=probe)
+
+    prop()
+
+
 def test_fast_ptt_cluster_time_arbitrary_subset_falls_back():
     spec = hikey960()
     t = PTT(spec)
