@@ -24,6 +24,11 @@ figure's own metric, e.g. TAOs/s for Fig 6).
            per-(type, impl) cost curves, threaded with every host-available
            kernel impl bound as TAO variants); writes
            `--out` (default benchmarks/BENCH_impl.json).
+  chaos  — fleet-scale fault injection: byte-identity pin gate, then the
+           bursty two-tenant stream under a mid-burst group kill plus
+           straggler onset, legs {no-chaos, chaos, chaos+gate+preemption}
+           with chunk-conservation asserts on both vehicles; writes
+           `--out` (default benchmarks/BENCH_chaos.json).
   train  — training-DAG orchestrator at fleet scale.
   roofline — per (arch x shape) roofline terms from the dry-run artifacts
              (see EXPERIMENTS.md §Roofline; requires experiments/dryrun/).
@@ -710,6 +715,211 @@ def impl_bench(vehicle: str = "both",
         print(f"# impl report -> {path}", flush=True)
 
 
+def _slo_attainment(res, slo: dict) -> dict:
+    """Per-tenant fraction of completed DAGs whose sojourn met the SLO."""
+    out = {}
+    for tenant, stats in res.per_tenant().items():
+        done = [s for s in stats if s.done]
+        if not done:
+            out[tenant] = 0.0
+            continue
+        out[tenant] = round(
+            sum(1 for s in done if s.sojourn <= slo[tenant]) / len(done), 4)
+    return out
+
+
+def _assert_conservation(res, workload, where: str) -> None:
+    """Every admitted chunk completes exactly once: all admitted DAGs are
+    done, the completion counter matches the admitted TAO total, and no
+    TAO's ChunkCursor holds unclaimed chunks.  A violation is a scheduler
+    bug (lost or stranded work), never a timing flake — abort hard."""
+    admitted = [s for s in res.per_dag.values() if s.was_admitted]
+    expect = sum(s.n_taos for s in admitted)
+    not_done = [s.dag_id for s in admitted if not s.done]
+    leftover = sum(
+        1 for a in workload.arrivals() for t in a.dag.nodes
+        if t.cursor is not None and t.cursor.unclaimed > 0)
+    if res.completed != expect or not_done or leftover:
+        sys.exit(f"CHUNK CONSERVATION VIOLATION ({where}): "
+                 f"completed={res.completed} expected={expect} "
+                 f"unfinished_dags={not_done[:8]} "
+                 f"taos_with_unclaimed_chunks={leftover}")
+
+
+def chaos_bench(vehicle: str = "both",
+                out: str = "benchmarks/BENCH_chaos.json") -> None:
+    """Fleet-scale chaos A/B: the bursty two-tenant stream under a
+    mid-burst group kill plus straggler onset, legs {no-chaos, chaos,
+    chaos+gate+preemption} on both vehicles.
+
+    Gate first: the byte-identity pins are recomputed — chaos disabled
+    must schedule exactly as the pre-chaos stack, and a mismatch aborts
+    before any timing runs.  The simulator leg is fully deterministic
+    (virtual-time fault injection); the threaded leg is a wall-clock smoke
+    whose *assertions* are timing-free (chunk conservation: every payload
+    chunk executed exactly once, every admitted TAO committed) while its
+    latency numbers are informational only.
+    """
+    import threading
+    import time as _time
+
+    from repro.core import (ChunkedWork, Simulator, ThreadedRuntime,
+                            bursty_workload, fleet, hikey960, make_gate,
+                            make_policy, make_preemption)
+    from repro.core.chaos import ChaosPlanBuilder
+    from repro.core.identity import check_pins
+
+    # -- byte-identity gate (deterministic: a failure is a refactor bug) ---
+    violations = check_pins()
+    for v in violations:
+        print(f"# BYTE-IDENTITY VIOLATION: {v}", flush=True)
+    if violations:
+        sys.exit("chaos bench aborted: chaos-disabled schedules diverged "
+                 "from the pinned pre-chaos signatures")
+    emit("chaos.identity.pins", 0.0, "8/8 pinned signatures reproduced")
+
+    report: dict = {
+        "identity": {"pinned": 8, "violations": violations},
+        "sim": {}, "threaded": {},
+    }
+
+    # -- simulator leg: deterministic virtual-time fault injection ---------
+    if vehicle in ("sim", "both"):
+        spec = fleet(48, 16)
+        slo = {"steady": 0.5, "burst": 3.0}
+        # mid-burst (burst lands at t=0.5 on this stream): kill four BIG
+        # groups of 8 outright, degrade the remaining two to 0.25x
+        # (straggler onset) — the whole BIG fleet impaired until repair
+        plan = (ChaosPlanBuilder()
+                .kill(0.55, range(0, 32))
+                .degrade(0.55, range(32, 48), 0.25)
+                .recover(4.5, range(0, 48))
+                .build())
+        report["sim"]["plan"] = [
+            {"at": e.at, "action": e.action, "workers": list(e.workers),
+             "speed": e.speed} for e in plan.events]
+
+        def sim_leg(chaos, gate, ctrl):
+            # heavier burst than the admission bench's historical stream:
+            # the fault window must overlap genuine contention, or 64-way
+            # water-filling silently absorbs the lost capacity
+            wl = bursty_workload(n_steady=10, steady_rate=2.0,
+                                 steady_tasks=60, n_burst=30, burst_at=0.5,
+                                 burst_rate=100.0, burst_tasks=250, seed=1,
+                                 n_chunks=4)
+            sim = Simulator(spec, make_policy("molding:adaptive"), seed=1)
+            res = sim.run_workload(wl, admission=gate, preemption=ctrl,
+                                   chaos=chaos)
+            return res, wl
+
+        legs = (
+            ("no-chaos", None, None, None),
+            ("chaos", plan, None, None),
+            ("chaos+gate+preemption", plan,
+             make_gate("slo-adaptive", slo=0.5,
+                       slo_per_tenant={"burst": 3.0}),
+             make_preemption("backlog")),
+        )
+        for name, chaos, gate, ctrl in legs:
+            res, wl = sim_leg(chaos, gate, ctrl)
+            _assert_conservation(res, wl, f"sim/{name}")
+            attain = _slo_attainment(res, slo)
+            row = {
+                "makespan_s": round(res.makespan, 6),
+                "completed": res.completed,
+                "admitted_dags": sum(1 for s in res.per_dag.values()
+                                     if s.was_admitted),
+                "total_dags": len(res.per_dag),
+                "slo_attainment": attain,
+                "failure_requeues": res.failure_requeues_by_tenant(),
+            }
+            report["sim"][name] = row
+            emit(f"chaos.sim.{name.replace('+', '_')}",
+                 res.makespan / max(res.completed, 1) * 1e6,
+                 f"makespan={res.makespan:.4f}s;"
+                 f"attain={';'.join(f'{t}={v:.2f}' for t, v in sorted(attain.items()))};"
+                 f"requeues={sum(row['failure_requeues'].values())}")
+
+    # -- threaded leg: wall-clock smoke, timing-free conservation asserts --
+    if vehicle in ("threaded", "both"):
+        spec = hikey960()
+        slo = {"steady": 0.12, "burst": 0.6}
+        n_chunks = 4
+        # wall-clock offsets sized so the kill lands inside the burst on a
+        # typical host; if the host is fast/slow enough to miss it the
+        # conservation asserts still hold (they are timing-independent)
+        plan = (ChaosPlanBuilder()
+                .kill(0.08, [4, 5])
+                .degrade(0.08, [6], 0.3)
+                .recover(0.6, [4, 5, 6])
+                .build())
+        report["threaded"]["plan"] = [
+            {"at": e.at, "action": e.action, "workers": list(e.workers),
+             "speed": e.speed} for e in plan.events]
+
+        def threaded_leg(chaos, gate, ctrl):
+            counts: dict = {}
+            lock = threading.Lock()
+            wl = bursty_workload(n_steady=6, steady_rate=15.0,
+                                 steady_tasks=25, n_burst=8, burst_at=0.05,
+                                 burst_rate=200.0, burst_tasks=60, seed=2,
+                                 n_chunks=n_chunks)
+            for arr in wl:
+                for node in arr.dag.nodes:
+                    def fn(i, key=(arr.dag_id, node.id)):
+                        with lock:
+                            counts[(key, i)] = counts.get((key, i), 0) + 1
+                        _time.sleep(0.001 / n_chunks)
+                    node.work = ChunkedWork(fn, n_chunks)
+            rt = ThreadedRuntime(spec, make_policy("molding:adaptive"),
+                                 seed=1)
+            res = rt.run_workload(wl, timeout_s=120.0, admission=gate,
+                                  preemption=ctrl, chaos=chaos)
+            return res, wl, counts
+
+        legs = (
+            ("no-chaos", None, None, None),
+            ("chaos", plan, None, None),
+            ("chaos+gate+preemption", plan,
+             make_gate("slo-adaptive", slo=0.12,
+                       slo_per_tenant={"burst": 0.6}, headroom=16.0),
+             make_preemption("backlog")),
+        )
+        for name, chaos, gate, ctrl in legs:
+            res, wl, counts = threaded_leg(chaos, gate, ctrl)
+            _assert_conservation(res, wl, f"threaded/{name}")
+            # the strongest claim only the threaded vehicle can make: each
+            # (tao, chunk) payload ran exactly once — nothing lost to the
+            # kill, nothing replayed by the re-admission
+            dup = [k for k, c in counts.items() if c != 1]
+            admitted = [s for s in res.per_dag.values() if s.was_admitted]
+            expect_chunks = sum(s.n_taos for s in admitted) * n_chunks
+            if dup or len(counts) != expect_chunks:
+                sys.exit(f"CHUNK CONSERVATION VIOLATION (threaded/{name}): "
+                         f"{len(dup)} duplicated chunks, "
+                         f"{len(counts)}/{expect_chunks} executed")
+            attain = _slo_attainment(res, slo)
+            row = {
+                "makespan_s": round(res.makespan, 6),
+                "completed": res.completed,
+                "chunks_executed_once": len(counts),
+                "slo_attainment": attain,
+                "failure_requeues": res.failure_requeues_by_tenant(),
+            }
+            report["threaded"][name] = row
+            emit(f"chaos.threaded.{name.replace('+', '_')}",
+                 res.makespan / max(res.completed, 1) * 1e6,
+                 f"chunks={len(counts)}/1x;"
+                 f"attain={';'.join(f'{t}={v:.2f}' for t, v in sorted(attain.items()))};"
+                 f"requeues={sum(row['failure_requeues'].values())}")
+
+    if out:
+        path = pathlib.Path(out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"# chaos report -> {path}", flush=True)
+
+
 def train_bench() -> None:
     from repro.core import fleet, make_policy
     from repro.core.train_orchestrator import simulate_training
@@ -758,7 +968,7 @@ def roofline(dryrun_dir: str = "experiments/dryrun/single_pod") -> None:
 
 # ---------------------------------------------------------------------------
 SECTIONS = ("all", "fig4", "fig6", "tab", "multi-dag", "multidag", "serve",
-            "impl", "train", "roofline")
+            "impl", "chaos", "train", "roofline")
 
 
 VEHICLES = ("sim", "threaded")
@@ -875,6 +1085,11 @@ def main() -> None:
         # placement on both vehicles (--vehicle narrows, --out overrides)
         impl_bench(vehicle=vehicle if vehicle_set else "both",
                    out=out or "benchmarks/BENCH_impl.json")
+    if sel("chaos"):
+        # chaos A/B: byte-identity gate + {no-chaos, chaos, chaos+gate+
+        # preemption} with chunk-conservation asserts (--vehicle narrows)
+        chaos_bench(vehicle=vehicle if vehicle_set else "both",
+                    out=out or "benchmarks/BENCH_chaos.json")
     if sel("train"):
         train_bench()
     if sel("roofline"):

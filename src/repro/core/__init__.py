@@ -4,6 +4,8 @@ placement and task molding (Rohlin, Fahlgren, Pericàs — HIP3ES 2019)."""
 from .admission import (ALL_GATE_NAMES, AdmissionDecision, AdmissionGate,
                         AdmissionRequest, LoadSignals, NoAdmission,
                         SloAdaptiveGate, TokenBucketGate, make_gate)
+from .chaos import (DEGRADE, KILL, RECOVER, ChaosEvent, ChaosPlan,
+                    ChaosPlanBuilder, group_kill_plan)
 from .dag import DEFAULT_IMPL, TAO, ImplVariant, TaoDag, chain
 from .dag_gen import (KERNEL_TYPES, bursty_workload, paper_dags, random_dag,
                       random_workload)
@@ -46,4 +48,6 @@ __all__ = [
     "run_policy",
     "DagArrival", "DagStats", "Workload", "WorkloadResult", "percentile",
     "trace_signature",
+    "DEGRADE", "KILL", "RECOVER", "ChaosEvent", "ChaosPlan",
+    "ChaosPlanBuilder", "group_kill_plan",
 ]

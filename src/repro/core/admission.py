@@ -122,8 +122,9 @@ class LoadSignals:
 
     in_flight: int          # ready+running TAOs across all namespaces
     active_namespaces: int  # DAG namespaces with >= 1 ready/running TAO
-    n_workers: int
+    n_workers: int          # *surviving* capacity (dead workers subtracted)
     completed: int          # TAOs committed so far this run
+    n_failed: int = 0       # workers currently dead (chaos KILL)
 
 
 class AdmissionGate:

@@ -111,11 +111,22 @@ class ClusterSpec:
                 f"width {width} not a valid width for {self.n_workers} workers"
             ) from None
 
-    def eligible_leaders(self, width: int) -> tuple[int, ...]:
-        """Workers that can lead a place of ``width`` (aligned, in-range)."""
+    def eligible_leaders(self, width: int,
+                         exclude: frozenset | tuple = ()) -> tuple[int, ...]:
+        """Workers that can lead a place of ``width`` (aligned, in-range).
+
+        ``exclude`` masks dead workers (chaos KILL): a place whose *any*
+        member is excluded cannot be led.  The empty-mask call returns the
+        cached tuple *object* itself, which callers (the PTT) rely on for
+        identity checks — chaos disabled must stay byte-identical.
+        """
         elig = self._eligible.get(width)
         if elig is None:  # non-power-of-two widths: compute on demand
             elig = tuple(range(0, self.n_workers - width + 1, width))
+        if exclude:
+            elig = tuple(c for c in elig
+                         if not any(m in exclude
+                                    for m in range(c, c + width)))
         return elig
 
     def clusters(self) -> tuple[tuple[str, tuple[int, ...]], ...]:

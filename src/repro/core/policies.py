@@ -85,6 +85,12 @@ class SchedulerContext(Protocol):
         history).  Policies damp width/impl aggressiveness as it grows."""
         ...
 
+    def dead_workers(self) -> frozenset:
+        """Workers currently failed (chaos KILL); empty on healthy runs.
+        Policies read it through ``getattr`` so synthetic contexts without
+        the method behave as fully healthy."""
+        ...
+
 
 # ---------------------------------------------------------------------------
 # shared joint-decision helpers
@@ -109,6 +115,27 @@ def _damp_level(tao: TAO, ctx: SchedulerContext) -> int:
     if fn is None:
         return 0
     return min(fn(tao.dag_id) // DAMP_DISPLACEMENTS, DAMP_MAX_LEVEL)
+
+
+def _dead_set(ctx) -> frozenset:
+    """Workers currently failed (chaos KILL); empty on healthy runs (and
+    for synthetic contexts that predate the chaos engine)."""
+    fn = getattr(ctx, "dead_workers", None)
+    return fn() if fn is not None else frozenset()
+
+
+def _alive_pool(ctx, pool):
+    """Filter a placement pool against the dead-worker set.
+
+    With no dead workers this returns ``pool`` itself — the very same
+    tuple object — so ``rng.choice`` consumes identical state and healthy
+    schedules stay byte-identical.  If every pool member is dead the
+    original pool is returned (the vehicle redirects off dead targets)."""
+    dead = _dead_set(ctx)
+    if not dead:
+        return pool
+    alive = tuple(w for w in pool if w not in dead)
+    return alive or pool
 
 
 def _clamp_width(spec: ClusterSpec, width: int) -> int:
@@ -197,7 +224,7 @@ class CriticalityAwarePolicy(Policy):
             pool = ctx.spec.big_workers or ctx.spec.little_workers
         else:
             pool = ctx.spec.little_workers or ctx.spec.big_workers
-        target = ctx.rng.choice(pool)
+        target = ctx.rng.choice(_alive_pool(ctx, pool))
         names = _variant_names(tao)
         if len(names) == 1:
             return Placement(target=target, width=tao.width_hint,
@@ -217,6 +244,18 @@ class CriticalityPTTPolicy(Policy):
 
     name = "crit-ptt"
 
+    @staticmethod
+    def _random_target(ctx: SchedulerContext) -> int:
+        """Uniform random worker; dead workers masked out under chaos
+        (the healthy path keeps the original single randrange draw)."""
+        dead = _dead_set(ctx)
+        if dead:
+            alive = tuple(w for w in range(ctx.spec.n_workers)
+                          if w not in dead)
+            if alive:
+                return ctx.rng.choice(alive)
+        return ctx.rng.randrange(ctx.spec.n_workers)
+
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
         width = tao.width_hint
         names = _variant_names(tao)
@@ -227,7 +266,7 @@ class CriticalityPTTPolicy(Policy):
                 if leader is not None:
                     return Placement(target=leader, width=width,
                                      impl=names[0])
-            return Placement(target=ctx.rng.randrange(ctx.spec.n_workers),
+            return Placement(target=self._random_target(ctx),
                              width=width, impl=names[0])
         table = ctx.ptt.table(tao.type)
         explore = _damp_level(tao, ctx) == 0
@@ -246,7 +285,7 @@ class CriticalityPTTPolicy(Policy):
                         impl, leader, best_t = nm, cand, t
             if leader is not None:
                 return Placement(target=leader, width=width, impl=impl)
-        target = ctx.rng.randrange(ctx.spec.n_workers)
+        target = self._random_target(ctx)
         impl = _choose_impl(table, leader_of(target, cw), cw, names,
                             explore=explore)
         return Placement(target=target, width=width, impl=impl)
@@ -324,14 +363,14 @@ class WeightBasedPolicy(Policy):
         # zero-init exploration: measure the untried cluster first
         if t_big == 0.0 and t_little == 0.0:
             pool = bigs if ctx.rng.random() < 0.5 else littles
-            return Placement(target=ctx.rng.choice(pool), width=width,
-                             impl=impl)
+            return Placement(target=ctx.rng.choice(_alive_pool(ctx, pool)),
+                             width=width, impl=impl)
         if t_big == 0.0:
-            return Placement(target=ctx.rng.choice(bigs), width=width,
-                             impl=impl)
+            return Placement(target=ctx.rng.choice(_alive_pool(ctx, bigs)),
+                             width=width, impl=impl)
         if t_little == 0.0:
-            return Placement(target=ctx.rng.choice(littles), width=width,
-                             impl=impl)
+            return Placement(target=ctx.rng.choice(_alive_pool(ctx, littles)),
+                             width=width, impl=impl)
         return self._biased(tao, ctx, t_big, t_little, width, impl)
 
     def _biased(self, tao: TAO, ctx: SchedulerContext, t_big: float,
@@ -348,7 +387,8 @@ class WeightBasedPolicy(Policy):
                                   / (self.OLD_WEIGHT + 1))
         goes_big = self._goes_big(tao, ctx, weight, threshold)
         pool = ctx.spec.big_workers if goes_big else ctx.spec.little_workers
-        return Placement(target=ctx.rng.choice(pool), width=width, impl=impl)
+        return Placement(target=ctx.rng.choice(_alive_pool(ctx, pool)),
+                         width=width, impl=impl)
 
     def _place_joint(self, tao: TAO, ctx: SchedulerContext, table: PTT,
                      names: Sequence[str], width: int) -> Placement:
@@ -371,14 +411,17 @@ class WeightBasedPolicy(Policy):
             if explore:
                 if t_big == 0.0 and t_little == 0.0:
                     pool = bigs if ctx.rng.random() < 0.5 else littles
-                    return Placement(target=ctx.rng.choice(pool), width=width,
-                                     impl=impl)
+                    return Placement(
+                        target=ctx.rng.choice(_alive_pool(ctx, pool)),
+                        width=width, impl=impl)
                 if t_big == 0.0:
-                    return Placement(target=ctx.rng.choice(bigs), width=width,
-                                     impl=impl)
+                    return Placement(
+                        target=ctx.rng.choice(_alive_pool(ctx, bigs)),
+                        width=width, impl=impl)
                 if t_little == 0.0:
-                    return Placement(target=ctx.rng.choice(littles),
-                                     width=width, impl=impl)
+                    return Placement(
+                        target=ctx.rng.choice(_alive_pool(ctx, littles)),
+                        width=width, impl=impl)
             if t_big > 0.0 and t_little > 0.0:
                 measured.append((min(t_big, t_little), t_big, t_little, impl))
         if not measured:
@@ -394,8 +437,8 @@ class WeightBasedPolicy(Policy):
                 pool = bigs
             else:
                 pool = littles
-            return Placement(target=ctx.rng.choice(pool), width=width,
-                             impl=impl)
+            return Placement(target=ctx.rng.choice(_alive_pool(ctx, pool)),
+                             width=width, impl=impl)
         _best, t_big, t_little, impl = min(measured)
         return self._biased(tao, ctx, t_big, t_little, width, impl)
 

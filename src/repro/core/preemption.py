@@ -151,12 +151,18 @@ class ChunkCursor:
         with self._lock:
             self._yield = False
 
-    def rearm(self) -> None:
+    def rearm(self, count_displacement: bool = True) -> None:
         """Re-open the cursor for the continuation segment and count the
-        completed displacement."""
+        completed displacement.
+
+        ``count_displacement=False`` is the chaos path: a segment cut
+        short because its workers *died* is not a policy displacement, so
+        it must not consume the TAO's ``max_preemptions`` budget (a TAO
+        straddling repeated failures must stay re-admittable)."""
         with self._lock:
             self._yield = False
-            self.preemptions += 1
+            if count_displacement:
+                self.preemptions += 1
 
     @property
     def yield_requested(self) -> bool:

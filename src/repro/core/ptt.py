@@ -133,6 +133,11 @@ class PTT:
         self._lock = threading.Lock()
         # eligible leaders per width index, in candidate (scan) order
         self._eligible = [spec.eligible_leaders(w) for w in spec.widths]
+        # chaos mask: workers currently dead.  Empty (the overwhelmingly
+        # common case) keeps every query on its original path; non-empty
+        # masks dead workers out of leader choice and cluster means.
+        self._excluded: frozenset = frozenset()
+        self._elig_alive = self._eligible
         if fast_query:
             # (class-group tuple, class) pairs for O(1) identity detection in
             # cluster_time: ClusterSpec caches workers_of(), so policies pass
@@ -154,6 +159,26 @@ class PTT:
     def impls(self) -> tuple:
         """Impl names with materialised cell blocks (recorded *or* queried)."""
         return tuple(self._blocks)
+
+    def set_excluded(self, excluded: frozenset) -> None:
+        """Mask ``excluded`` workers out of every placement query.
+
+        While the mask is non-empty ``best_leader`` bypasses the fast-query
+        structures entirely (the monotone untried cursor and the lazy best
+        cache assume the *global* candidate list) and scans the filtered
+        eligible leaders instead; the incremental aggregates keep updating
+        on ``record()`` throughout, so clearing the mask returns queries to
+        the O(1) paths with state that never went stale.
+        """
+        excluded = frozenset(excluded)
+        with self._lock:
+            self._excluded = excluded
+            if excluded:
+                self._elig_alive = [
+                    self.spec.eligible_leaders(w, exclude=excluded)
+                    for w in self.spec.widths]
+            else:
+                self._elig_alive = self._eligible
 
     # -- recording ---------------------------------------------------------
     def record(self, worker: int, width: int, elapsed: float,
@@ -234,14 +259,17 @@ class PTT:
         """
         wi = self.spec.width_index(width)
         blk = self._block(impl)
-        if self.fast_query and candidates is None:
+        dead = self._excluded
+        if self.fast_query and candidates is None and not dead:
             return self._best_leader_fast(blk, wi)
         if candidates is None:
-            candidates = self._eligible[wi]
+            candidates = self._elig_alive[wi]
         best = (None, math.inf)
         for c in candidates:
             if leader_of(c, width) != c:
                 continue  # not an eligible leader for this width
+            if dead and any(m in dead for m in range(c, c + width)):
+                continue  # place overlaps a dead worker
             t = float(blk._t[c, wi])
             if t == 0.0:
                 return (c, 0.0)  # force exploration
@@ -282,7 +310,8 @@ class PTT:
         """
         wi = self.spec.width_index(width)
         blk = self._block(impl)
-        if self.fast_query:
+        dead = self._excluded
+        if self.fast_query and not dead:
             for group, cls in self._groups:
                 if workers is group:
                     with self._lock:
@@ -290,6 +319,8 @@ class PTT:
                                                  blk._cls_cnt[cls][wi])
         ssum, cnt = 0, 0
         for w in workers:
+            if dead and w in dead:
+                continue    # dead workers drop out of class estimates
             t = float(blk._t[w, wi])
             if t > 0.0:
                 ssum += _to_scaled(t)
@@ -308,10 +339,13 @@ class PTT:
         """
         if widths is None:
             widths = self.spec.widths
+        dead = self._excluded
         best = (None, math.inf)
         for w in widths:
             if leader_of(leader, w) != leader:
                 continue  # this worker cannot lead at width w
+            if dead and any(m in dead for m in range(leader, leader + w)):
+                continue  # widening would pull in a dead worker
             t = self.time(leader, w, impl=impl)
             if t == 0.0:
                 return (w, 0.0)
@@ -387,14 +421,29 @@ class PTTRegistry:
         self.fast_query = fast_query
         self._tables: dict[str, PTT] = {}
         self._lock = threading.Lock()
+        self._excluded: frozenset = frozenset()
 
     def table(self, tao_type: str) -> PTT:
         tbl = self._tables.get(tao_type)
         if tbl is None:
             with self._lock:
-                tbl = self._tables.setdefault(
-                    tao_type, PTT(self.spec, fast_query=self.fast_query))
+                tbl = self._tables.get(tao_type)
+                if tbl is None:
+                    tbl = PTT(self.spec, fast_query=self.fast_query)
+                    if self._excluded:
+                        tbl.set_excluded(self._excluded)
+                    self._tables[tao_type] = tbl
         return tbl
+
+    def set_excluded(self, excluded: frozenset) -> None:
+        """Propagate the dead-worker mask to every (current and future)
+        table; an empty mask restores the original fast-query paths."""
+        excluded = frozenset(excluded)
+        with self._lock:
+            self._excluded = excluded
+            tables = tuple(self._tables.values())
+        for tbl in tables:
+            tbl.set_excluded(excluded)
 
     def __contains__(self, tao_type: str) -> bool:
         return tao_type in self._tables

@@ -107,11 +107,17 @@ class _TaoExec:
                  "start_claims", "remaining_members", "start_time", "lock",
                  "leader_start")
 
-    def __init__(self, tao: TAO, leader: int, width: int, n_workers: int):
+    def __init__(self, tao: TAO, leader: int, width: int, n_workers: int,
+                 dead=(), popper: int | None = None):
         self.tao = tao
         self.leader = leader
         self.width = width
-        self.members = [m for m in place_members(leader, width) if m < n_workers]
+        self.members = [m for m in place_members(leader, width)
+                        if m < n_workers and m not in dead]
+        if not self.members:
+            # the whole place died between placement and distribution: the
+            # popper (always alive — dead workers never pop) runs it solo
+            self.members = [popper if popper is not None else leader]
         self.cursor = ensure_cursor(tao)
         # chunks already spent when this segment began: eligibility for
         # preemption requires progress *within* the segment (mirrors the
@@ -165,6 +171,14 @@ class ThreadedRuntime:
         #                             dominance-DELAYed arrivals (ditto)
         self._tenant_of: dict[int, str] = {}   # dag_id -> tenant
         self._threads: list[threading.Thread] = []
+        # chaos state (injector thread writes, workers read; the set object
+        # is mutated in place so claim loops can hold one reference).  A
+        # dead worker parks and refuses ready pops / steals / chunk claims
+        # but still drains memberships already assembled on it, so
+        # remaining_members reaches zero and the TAO commits or requeues.
+        self._dead_workers: set[int] = set()
+        self._speed_scale = [1.0] * n          # DEGRADE sleep-scaling
+        self._chaos = None                     # active ChaosPlan or None
 
     # ------------------------------------------------------------------ admin
     def _begin_run(self, total: int) -> None:
@@ -193,6 +207,10 @@ class ThreadedRuntime:
         self._backlog_ns = {}
         self._throttled_ns = {}
         self._tenant_of = {}
+        self._dead_workers = set()
+        self._speed_scale = [1.0] * self.spec.n_workers
+        self._chaos = None
+        self.core.set_dead(frozenset())
         self._done.clear()
         self._error = None
         self._trace = []
@@ -223,8 +241,20 @@ class ThreadedRuntime:
 
     def _enqueue_ready(self, tao: TAO, waker: int) -> None:
         placement = self.core.admit(tao, waker)
-        with self._qlocks[placement.target]:
-            self._ready[placement.target].append(tao)
+        target = placement.target
+        dead = self._dead_workers
+        if dead and target in dead:
+            # a dead worker never pops its ready deque: redirect to the next
+            # alive worker (steals still rescue anything that races past
+            # this check, so the redirect is a latency fix, not correctness)
+            n = self.spec.n_workers
+            for off in range(1, n):
+                c = (target + off) % n
+                if c not in dead:
+                    target = c
+                    break
+        with self._qlocks[target]:
+            self._ready[target].append(tao)
         self._signal_work()
         # preemption consult point 1: a ready TAO may displace running work
         # (consulted after the enqueue so freed workers find it queued).
@@ -324,6 +354,28 @@ class ThreadedRuntime:
         self.core.release(tao)              # undo admit-time accounting
         self._enqueue_ready(tao, waker=worker)
 
+    def _requeue_failed(self, ex: _TaoExec, worker: int) -> None:
+        """Last member of an execution whose claimers died: re-admit the
+        unclaimed chunks as a continuation.  Unlike a policy displacement
+        this spends no preemption budget and feeds no damping — the TAO
+        was not displaced, its workers were killed under it."""
+        tao, cursor = ex.tao, ex.cursor
+        now_rel = time.perf_counter() - self._t0
+        cursor.rearm(count_displacement=False)
+        cursor.preempted_at = now_rel
+        if self._wl_stats is not None:
+            with self._stats_lock:
+                self._trace.append(TraceRecord(
+                    tao.id, tao.type, ex.leader, ex.width,
+                    ex.start_time - self._t0, now_rel, tuple(ex.members),
+                    dag_id=tao.dag_id, preempted=True,
+                    impl=tao.assigned_impl))
+                st = self._wl_stats.get(tao.dag_id)
+                if st is not None:
+                    st.record_failure_requeue()
+        self.core.release(tao, count_displacement=False)
+        self._enqueue_ready(tao, waker=worker)
+
     def _dpa_distribute(self, tao: TAO, popper: int) -> None:
         """Dynamic Place Allocation: push into members' assembly queues."""
         width = tao.assigned_width
@@ -335,7 +387,11 @@ class ThreadedRuntime:
         # pass through unchanged)
         tao.assigned_leader = leader
         self.core.rebind_impl(tao, leader)
-        ex = _TaoExec(tao, leader, width, self.spec.n_workers)
+        # snapshot the dead set: membership (and remaining_members) must be
+        # consistent for this segment even if a kill lands mid-distribute —
+        # a member that dies after assembly drains via the zero-claim exit
+        ex = _TaoExec(tao, leader, width, self.spec.n_workers,
+                      dead=tuple(self._dead_workers), popper=popper)
         ex.start_time = time.perf_counter()
         if self._preempt is not None:
             with self._run_lock:
@@ -373,13 +429,29 @@ class ThreadedRuntime:
         is_leader = worker == ex.leader
         if is_leader:
             ex.leader_start = time.perf_counter()
+        dead = self._dead_workers
+        chaos = self._chaos is not None
         while True:
+            # death point: a killed worker refuses further claims (its
+            # in-flight chunk — claimed before the kill landed — already
+            # completed, preserving exactly-once chunk execution)
+            if dead and worker in dead:
+                break
             # yield point: claims stop once a controller requested a yield,
             # so a displaced TAO halts after its in-flight chunks
             i = cursor.claim()
             if i is None:
                 break
-            work.chunk_fn(i)
+            if chaos:
+                # DEGRADE sleep-scaling: a chunk that took dt at full speed
+                # takes dt/s on a worker degraded to speed s
+                t_c = time.perf_counter()
+                work.chunk_fn(i)
+                s = self._speed_scale[worker]
+                if s < 1.0:
+                    time.sleep((time.perf_counter() - t_c) * (1.0 / s - 1.0))
+            else:
+                work.chunk_fn(i)
         # Snapshot the yield state BEFORE the member-exit decrement: once
         # we decrement, the last member may requeue the continuation and
         # rearm() the cursor, clearing the flag — a non-last leader that
@@ -391,7 +463,7 @@ class ThreadedRuntime:
         with ex.lock:
             ex.remaining_members -= 1
             last = ex.remaining_members == 0
-        if is_leader and not preempted:
+        if is_leader and not preempted and not (dead and worker in dead):
             # leader-only PTT record; a preempted segment's elapsed covers
             # partial work mid-displacement and is skipped.  A
             # continuation's completing segment records as-is: it
@@ -407,10 +479,18 @@ class ThreadedRuntime:
                 with self._run_lock:
                     if self._running_execs.pop(ex.tao, None) is not None:
                         self._occupied_slots -= len(ex.members)
-            if cursor.yield_requested:
-                if cursor.unclaimed > 0:
+            if cursor.unclaimed > 0:
+                # chunks left with nobody claiming them: either a controller
+                # yielded the TAO, or every remaining claimer died.  Both
+                # repackage the unclaimed chunks as a continuation through
+                # release->admit; only the policy displacement spends the
+                # preemption budget and feeds damping.
+                if cursor.yield_requested:
                     self._requeue_preempted(ex, worker)
-                    return
+                else:
+                    self._requeue_failed(ex, worker)
+                return
+            if cursor.yield_requested:
                 cursor.clear_yield()   # yield raced with the final claim
             end_rel = time.perf_counter() - self._t0
             for child in self.core.commit_and_wakeup(ex.tao):
@@ -478,21 +558,28 @@ class ThreadedRuntime:
             while not self._done.is_set():
                 # epoch read precedes the queue scans (see _signal_work)
                 epoch = self._work_epoch
-                # 1) assembly work (TAOs already placed on me)
+                # 1) assembly work (TAOs already placed on me).  A dead
+                #    worker still drains these — with claims refused it is
+                #    a zero-work membership exit, which is what lets
+                #    remaining_members reach zero and the TAO commit or
+                #    requeue instead of hanging on the corpse.
                 if self._try_assembly(worker):
                     continue
-                # 2) my own ready deque (locality)
-                if self._try_ready(worker, worker):
-                    continue
-                # 3) one random steal attempt, interleaved with the local
-                #    checks (paper §5) — drawn from the OTHER n-1 workers,
-                #    since stealing from oneself wastes the attempt
-                if n > 1:
-                    victim = rng.randrange(n - 1)
-                    if victim >= worker:
-                        victim += 1
-                    if self._try_ready(worker, victim):
+                if not self._dead_workers or worker not in self._dead_workers:
+                    # 2) my own ready deque (locality)
+                    if self._try_ready(worker, worker):
                         continue
+                    # 3) one random steal attempt, interleaved with the
+                    #    local checks (paper §5) — drawn from the OTHER n-1
+                    #    workers, since stealing from oneself wastes the
+                    #    attempt.  (Stealing FROM a dead worker's deque is
+                    #    allowed: it rescues anything stranded there.)
+                    if n > 1:
+                        victim = rng.randrange(n - 1)
+                        if victim >= worker:
+                            victim += 1
+                        if self._try_ready(worker, victim):
+                            continue
                 # 4) nothing anywhere: park until new work is signalled.
                 #    On wake-up the loop re-runs the local checks before the
                 #    next steal, preserving the paper's one-steal-per-scan
@@ -628,8 +715,67 @@ class ThreadedRuntime:
             self._error = e
             self._set_done()
 
+    def _inject_chaos(self, plan) -> None:
+        """Injector thread: apply each :class:`~repro.core.chaos.ChaosEvent`
+        at its wall-clock offset relative to run start.
+
+        KILL marks workers dead (they park and refuse claims; memberships
+        already assembled drain as zero-claim exits), masks them out of
+        placement via ``core.set_dead`` and drains their stranded ready
+        TAOs back through release->admit.  DEGRADE sets the sleep-scale
+        chunk multiplier.  RECOVER undoes both."""
+        from .chaos import DEGRADE, KILL
+        n = self.spec.n_workers
+        try:
+            for ev in plan.events:
+                delay = ev.at - (time.perf_counter() - self._t0)
+                if delay > 0 and self._done.wait(timeout=delay):
+                    return          # run ended mid-plan
+                if self._done.is_set():
+                    return
+                if ev.action == DEGRADE:
+                    for w in ev.workers:
+                        if w < n and w not in self._dead_workers:
+                            self._speed_scale[w] = ev.speed
+                    continue
+                if ev.action == KILL:
+                    newly = [w for w in ev.workers
+                             if w < n and w not in self._dead_workers]
+                    for w in newly:
+                        self._dead_workers.add(w)
+                        self._speed_scale[w] = 1.0
+                    self.core.set_dead(frozenset(self._dead_workers))
+                    # stranded ready TAOs go back through release->admit so
+                    # placement sees the shrunken fleet (steals would rescue
+                    # them eventually; this bounds the latency and lets the
+                    # policy re-place with the dead mask applied)
+                    for w in newly:
+                        with self._qlocks[w]:
+                            stranded = list(self._ready[w])
+                            self._ready[w].clear()
+                        for tao in stranded:
+                            if self._wl_stats is not None:
+                                with self._stats_lock:
+                                    st = self._wl_stats.get(tao.dag_id)
+                                    if st is not None:
+                                        st.record_failure_requeue()
+                            self.core.release(tao, count_displacement=False)
+                            self._enqueue_ready(tao, waker=w)
+                    self._signal_work()   # dead workers wake to drain
+                    continue
+                # RECOVER: clear both kill and degrade state
+                for w in ev.workers:
+                    if w < n:
+                        self._dead_workers.discard(w)
+                        self._speed_scale[w] = 1.0
+                self.core.set_dead(frozenset(self._dead_workers))
+                self._signal_work()
+        except BaseException as e:  # surface injector crashes to run_workload
+            self._error = e
+            self._set_done()
+
     def run_workload(self, workload, timeout_s: float = 600.0,
-                     admission=None, preemption=None):
+                     admission=None, preemption=None, chaos=None):
         """Execute a multi-DAG arrival stream on the live worker pool.
 
         The same contract as :meth:`Simulator.run_workload`: DAGs are
@@ -646,12 +792,17 @@ class ThreadedRuntime:
         :class:`~repro.core.preemption.PreemptionController`: victims it
         names get a cooperative yield flag, stop at their next chunk
         boundary, and are requeued as continuations (``None`` — the
-        default — never displaces and schedules exactly as before)."""
+        default — never displaces and schedules exactly as before).
+        ``chaos`` is an optional :class:`~repro.core.chaos.ChaosPlan`
+        applied by an injector thread at wall-clock offsets (``None``
+        or an empty plan injects nothing and schedules as before)."""
         from .workload import DagStats, WorkloadResult
         arrivals = workload.arrivals()
         total = workload.total_taos()
         self._begin_run(total)
         self._gate = admission
+        if chaos:
+            self._chaos = chaos
         tenant_of = {a.dag_id: a.tenant for a in arrivals}
         # displacement damping aggregates per tenant (reset_counters in
         # _begin_run cleared the previous run's mapping and history)
@@ -672,12 +823,19 @@ class ThreadedRuntime:
         if live:
             admitter = threading.Thread(target=self._admit_arrivals,
                                         args=(live, admission), daemon=True)
+            injector = None
+            if self._chaos is not None:
+                injector = threading.Thread(target=self._inject_chaos,
+                                            args=(self._chaos,), daemon=True)
+                injector.start()
             admitter.start()
             try:
                 elapsed = self._run_workers(timeout_s)
             finally:
                 self._set_done()
                 admitter.join(timeout=5.0)
+                if injector is not None:
+                    injector.join(timeout=5.0)
         else:
             elapsed = 0.0
         n = self.spec.n_workers

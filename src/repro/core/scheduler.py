@@ -115,6 +115,11 @@ class SchedulerCore:
         self._displaced_ns: dict[int, int] = {}
         self._displaced_tenant: dict[str, int] = {}
         self._tenant_of: dict[int, str] = {}
+        # chaos: workers currently dead (KILL, not yet RECOVERed).  Empty on
+        # every non-chaotic run; policies and the PTT consult it so placement
+        # never targets a place overlapping a dead worker, and
+        # admission_signals reports the shrunken capacity to SLO gates.
+        self._dead: frozenset = frozenset()
         self._lock = threading.RLock()
 
     # -- SchedulerContext ----------------------------------------------------
@@ -165,15 +170,33 @@ class SchedulerCore:
         with self._lock:
             self._tenant_of.update(mapping)
 
+    def dead_workers(self) -> frozenset:
+        """Workers currently failed (chaos KILL).  Empty on healthy runs."""
+        return self._dead
+
+    def set_dead(self, dead: frozenset) -> None:
+        """Install the chaos dead-worker set: masks the PTT's placement
+        queries (see :meth:`PTTRegistry.set_excluded`) and shrinks the
+        capacity :meth:`admission_signals` reports, so SLO-adaptive gates
+        throttle to the surviving fleet.  An empty set restores every
+        original code path (byte-identity with chaos disabled)."""
+        dead = frozenset(dead)
+        with self._lock:
+            self._dead = dead
+        self.ptt.set_excluded(dead)
+
     def admission_signals(self) -> LoadSignals:
         """One internally-consistent load snapshot for admission gates
         (taken under the core lock, so in_flight/active_namespaces/
-        completed all describe the same instant)."""
+        completed all describe the same instant).  Capacity shrinks by the
+        dead-worker count, so backlog limits track post-failure capacity."""
         with self._lock:
+            n_failed = len(self._dead)
             return LoadSignals(in_flight=self._in_flight,
                                active_namespaces=len(self._in_flight_ns),
-                               n_workers=self.spec.n_workers,
-                               completed=self._completed)
+                               n_workers=self.spec.n_workers - n_failed,
+                               completed=self._completed,
+                               n_failed=n_failed)
 
     # -- lifecycle transitions -------------------------------------------------
     def admit(self, tao: TAO, waker: int) -> Placement:
@@ -236,19 +259,26 @@ class SchedulerCore:
         else:
             del self._in_flight_ns[tao.dag_id]
 
-    def release(self, tao: TAO) -> None:
+    def release(self, tao: TAO, count_displacement: bool = True) -> None:
         """A running TAO was stopped at a chunk boundary (preempted): undo
         the admit-time accounting WITHOUT counting a completion or waking
         children.  The vehicle re-admits the continuation through the
         normal :meth:`admit` path immediately after, so molding is free to
         choose a fresh (leader, width) and the load/criticality counters
-        stay balanced (release + admit == no net change)."""
+        stay balanced (release + admit == no net change).
+
+        ``count_displacement=False`` is the chaos re-admission path: a TAO
+        requeued because its workers *died* was not displaced by policy, so
+        it must neither feed preemption-aware damping nor consume the
+        tenant's displacement budget."""
         with self._lock:
             self._retire_locked(tao)
             # the continuation is re-placed from scratch: the old place is
             # meaningless (that is the point of preempting), so the leader
             # reverts to the not-yet-distributed sentinel
             tao.assigned_leader = -1
+            if not count_displacement:
+                return
             # displacement history: feed preemption-aware damping
             self._displaced_ns[tao.dag_id] = \
                 self._displaced_ns.get(tao.dag_id, 0) + 1

@@ -347,6 +347,17 @@ class Simulator:
     def fail_worker(self, worker: int) -> None:
         self.failed.add(worker)
         self.speed_mult[worker] = 0.0
+        # mask the dead worker out of placement immediately: between the
+        # injection and the next event, best_leader/dispatch must already
+        # refuse it (the failed-worker-leakage regression)
+        self.core.set_dead(frozenset(self.failed))
+
+    def recover_worker(self, worker: int) -> None:
+        """Undo :meth:`fail_worker` / :meth:`set_speed_multiplier` for one
+        worker (timed chaos RECOVER; also usable directly by tests)."""
+        self.failed.discard(worker)
+        self.speed_mult[worker] = 1.0
+        self.core.set_dead(frozenset(self.failed))
 
     def reset_faults(self) -> None:
         """Clear injected faults/stragglers (``speed_mult``/``failed``).
@@ -357,10 +368,11 @@ class Simulator:
         that wants a pristine pool for the next run calls this explicitly."""
         self.speed_mult = [1.0] * self.spec.n_workers
         self.failed.clear()
+        self.core.set_dead(frozenset())
 
     # -- main entry -----------------------------------------------------------
     def run(self, dag, max_events: int | None = None,
-            admission=None, preemption=None) -> SimResult:
+            admission=None, preemption=None, chaos=None) -> SimResult:
         """Execute one DAG (offline, arrival at t=0) or a whole ``Workload``
         stream (online arrivals).  Returns a ``WorkloadResult`` (a
         ``SimResult`` subclass) either way; workload runs carry the per-DAG
@@ -374,12 +386,12 @@ class Simulator:
         if isinstance(dag, Workload):
             return self.run_workload(dag, max_events=max_events,
                                      admission=admission,
-                                     preemption=preemption)
+                                     preemption=preemption, chaos=chaos)
         return self._execute([(0.0, 0, dag, "", "default", 0.0, None)],
-                             max_events, admission, preemption)
+                             max_events, admission, preemption, chaos)
 
     def run_workload(self, workload, max_events: int | None = None,
-                     admission=None, preemption=None):
+                     admission=None, preemption=None, chaos=None):
         """Execute a multi-DAG arrival stream on the shared pool.
 
         ``admission`` is an optional
@@ -388,14 +400,19 @@ class Simulator:
         behavior.  ``preemption`` is an optional
         :class:`~repro.core.preemption.PreemptionController`; ``None``
         (default) never displaces running work and schedules
-        byte-identically to the pre-preemption behavior."""
+        byte-identically to the pre-preemption behavior.  ``chaos`` is an
+        optional :class:`~repro.core.chaos.ChaosPlan` of timed
+        KILL/DEGRADE/RECOVER events executed at virtual-time offsets;
+        ``None`` or an empty plan schedules byte-identically to a
+        chaos-free run."""
         arrivals = [(a.at, a.dag_id, a.dag, a.name, a.tenant, a.tokens,
                      a.bind)
                     for a in workload.arrivals()]
-        return self._execute(arrivals, max_events, admission, preemption)
+        return self._execute(arrivals, max_events, admission, preemption,
+                             chaos)
 
     def _execute(self, arrivals: list, max_events: int | None, gate=None,
-                 ctrl=None):
+                 ctrl=None, chaos=None):
         from .admission import DELAY, REJECT, AdmissionRequest
         from .workload import DagStats, WorkloadResult
         # per-run counter reset: a reused Simulator must not report the
@@ -420,7 +437,12 @@ class Simulator:
         run_clusters: dict[TAO, frozenset] = {}
         busy_acc = 0.0
 
-        ARRIVE, COMPLETE, PREEMPT, RESUME = 0, 1, 2, 3
+        ARRIVE, COMPLETE, PREEMPT, RESUME, CHAOS = 0, 1, 2, 3, 4
+        # segment/cursor bookkeeping is needed by preemption controllers AND
+        # by chaos KILL truncation (to compute how many chunks a victim
+        # finished before its workers died); chaos=None + ctrl=None keeps
+        # every seed code path untouched
+        track = (ctrl is not None) or bool(chaos)
         events: list = []   # (time, seq, kind, payload)
         seq = itertools.count()
         now = 0.0
@@ -452,6 +474,19 @@ class Simulator:
             heapq.heappush(events,
                            (at, next(seq), ARRIVE,
                             (dag_id, dag, name, tenant, tokens, bind, None)))
+        if chaos:
+            for ev in chaos.events:
+                heapq.heappush(events, (ev.at, next(seq), CHAOS, ev))
+
+        def alive_after(w: int) -> int:
+            """First non-failed worker at or cyclically after ``w``
+            (``w`` itself when healthy — the no-chaos identity path)."""
+            if self.failed and w in self.failed:
+                for off in range(1, n_workers):
+                    c = (w + off) % n_workers
+                    if c not in self.failed:
+                        return c
+            return w
 
         def cluster_of(worker: int) -> str:
             return self.spec.class_of(worker)
@@ -583,7 +618,7 @@ class Simulator:
             st = stats.get(tao.dag_id)
             if st is not None and t0 < st.started:
                 st.started = t0
-            if ctrl is not None:
+            if track:
                 cursor = ensure_cursor(tao)
                 if cursor.preempted_at is not None:
                     # RESUME accounting: the continuation holds a place again
@@ -698,11 +733,18 @@ class Simulator:
 
         def enqueue_ready(tao: TAO, waker: int, t0: float) -> None:
             placement = self.core.admit(tao, waker)
-            push_queue(placement.target, tao)
+            # a dead target would strand the TAO forever (a dead worker
+            # never pops, and at the tail no future event triggers a
+            # steal): redirect to the next alive worker deterministically.
+            # Policies already mask dead workers, so this fires only for
+            # placements pinned by construction (e.g. homogeneous waker
+            # affinity) — and never on healthy runs.
+            target = alive_after(placement.target)
+            push_queue(target, tao)
             # an idle worker picks it up immediately: locality first
-            if placement.target in idle and free_time[placement.target] <= t0 + 1e-12:
-                idle.discard(placement.target)
-                dispatch_from(placement.target, t0)
+            if target in idle and free_time[target] <= t0 + 1e-12:
+                idle.discard(target)
+                dispatch_from(target, t0)
             elif idle:
                 w = idle.choice(self.rng) if fast \
                     else self.rng.choice(sorted(idle))
@@ -724,7 +766,7 @@ class Simulator:
                         gate_throttled())
                     for v in victims:
                         schedule_preempt(v, t0, beneficiary=tao,
-                                         ben_target=placement.target)
+                                         ben_target=target)
 
         n_events = 0
         while events:
@@ -732,6 +774,107 @@ class Simulator:
             if max_events is not None and n_events > max_events:
                 raise RuntimeError("simulator exceeded max_events (livelock?)")
             now, _, kind, payload = heapq.heappop(events)
+            if kind == CHAOS:
+                from .chaos import DEGRADE as C_DEGRADE, KILL as C_KILL
+                ev = payload
+                if ev.action == C_DEGRADE:
+                    # running segments keep their snapshot t_end — the same
+                    # start-time-sampling approximation the interference
+                    # model makes; new starts see the degraded rate
+                    for w in ev.workers:
+                        if w < n_workers and w not in self.failed:
+                            self.speed_mult[w] = ev.speed
+                    continue
+                if ev.action == C_KILL:
+                    newly = [w for w in ev.workers
+                             if w < n_workers and w not in self.failed]
+                    if not newly:
+                        continue
+                    for w in newly:
+                        self.failed.add(w)
+                        self.speed_mult[w] = 0.0
+                        idle.discard(w)
+                    dead = set(newly)
+                    self.core.set_dead(frozenset(self.failed))
+                    # 1) truncate running segments that lost a participant:
+                    #    chunks whose boundary passed are kept (mirrors the
+                    #    threaded claim discipline — a claimed chunk always
+                    #    completes), the rest are re-admitted as a
+                    #    continuation through release->admit
+                    victims = [(t2, r) for t2, r in running.items()
+                               if any(m in dead for m in r.participants)]
+                    requeue = []
+                    for tao, rec in victims:
+                        running.pop(tao)
+                        seg = run_info.pop(tao)
+                        occupied_slots -= len(rec.participants)
+                        if fast:
+                            interference.finish(tao.type,
+                                                run_clusters.pop(tao))
+                        for m in rec.participants:
+                            new_free = max(seg.joins.get(m, now), now)
+                            busy_acc -= seg.t_end - new_free
+                            free_time[m] = new_free
+                        rec.end = now
+                        rec.preempted = True
+                        span = seg.t_end - seg.t_begin
+                        done = 0
+                        if seg.n_seg > 1 and span > 0 and now > seg.t_begin:
+                            done = min(seg.n_seg - 1,
+                                       int((now - seg.t_begin)
+                                           / span * seg.n_seg))
+                        cursor = ensure_cursor(tao)
+                        if done:
+                            cursor.advance(done)
+                        # a failure requeue is not a policy displacement:
+                        # no preemption budget spent, no damping fed
+                        cursor.rearm(count_displacement=False)
+                        cursor.preempted_at = now
+                        st = stats.get(tao.dag_id)
+                        if st is not None:
+                            st.record_failure_requeue()
+                        self.core.release(tao, count_displacement=False)
+                        requeue.append((tao, rec.leader, rec.participants))
+                    # 2) ready TAOs stranded on a dead worker's queue go
+                    #    back through release->admit so placement sees the
+                    #    shrunken fleet
+                    for w in newly:
+                        while queues[w]:
+                            tao = queues[w].popleft()
+                            st = stats.get(tao.dag_id)
+                            if st is not None:
+                                st.record_failure_requeue()
+                            self.core.release(tao, count_displacement=False)
+                            requeue.append((tao, w, ()))
+                        if fast:
+                            nonempty.discard(w)
+                    # 3) re-admit, then let surviving freed members look
+                    #    for work (they are not in `idle` yet, so the
+                    #    re-admissions above queue rather than dispatch)
+                    for tao, waker, _ in requeue:
+                        enqueue_ready(tao, waker=alive_after(waker), t0=now)
+                    for _, _, participants in requeue:
+                        for m in participants:
+                            if m not in self.failed \
+                                    and free_time[m] <= now + 1e-12:
+                                if not dispatch_from(m, now):
+                                    idle.add(m)
+                    continue
+                # RECOVER: clear both kill and degrade state
+                revived = []
+                for w in ev.workers:
+                    if w >= n_workers:
+                        continue
+                    if w in self.failed:
+                        self.failed.discard(w)
+                        free_time[w] = max(free_time[w], now)
+                        revived.append(w)
+                    self.speed_mult[w] = 1.0
+                self.core.set_dead(frozenset(self.failed))
+                for w in revived:
+                    if not dispatch_from(w, now):
+                        idle.add(w)
+                continue
             if kind == ARRIVE:
                 dag_id, dag, name, tenant, tokens, bind, req = payload
                 st = stats.get(dag_id)
@@ -855,7 +998,7 @@ class Simulator:
             seg = run_info.pop(tao, None)
             if fast:
                 interference.finish(tao.type, run_clusters.pop(tao))
-            if ctrl is not None:
+            if track:
                 # the whole segment ran: all its chunks are spent
                 cursor = ensure_cursor(tao)
                 cursor.advance(cursor.n_chunks)

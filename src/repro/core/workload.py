@@ -180,6 +180,10 @@ class DagStats:
     # gap its continuations spent waiting to be re-placed
     preempted_count: int = 0
     preemption_delay: float = 0.0
+    # chaos accounting (repro.core.chaos): TAOs of this DAG re-admitted
+    # because the workers running them were KILLed — separate from the
+    # preemption ledger above, which counts *policy* displacements only
+    requeued_by_failure: int = 0
     # application work units (serving: prompt+gen tokens) carried by the
     # arrival; aggregated per tenant by WorkloadResult.tokens_by_tenant
     tokens: float = 0.0
@@ -215,6 +219,12 @@ class DagStats:
         (its continuation is being re-admitted); both vehicles call this
         at the moment the displacement takes effect."""
         self.preempted_count += 1
+
+    def record_failure_requeue(self) -> None:
+        """One of this DAG's running TAOs lost its workers to a chaos KILL
+        and its continuation is being re-admitted (claimed chunks are kept;
+        only unclaimed chunks are redone)."""
+        self.requeued_by_failure += 1
 
     def record_completion(self, t: float) -> None:
         """One TAO of this DAG committed at time ``t``; the last one stamps
@@ -348,6 +358,13 @@ class WorkloadResult(SimResult):
         """``tenant -> displacement count`` — the fairness surface benches
         assert on (e.g. the steady tenant is never the victim)."""
         return {tenant: sum(s.preempted_count for s in stats)
+                for tenant, stats in self.per_tenant().items()}
+
+    def failure_requeues_by_tenant(self) -> dict:
+        """``tenant -> TAO re-admissions caused by worker death`` (the
+        chaos bench's conservation/robustness surface; disjoint from
+        :meth:`preemptions_by_tenant`, which is policy displacements)."""
+        return {tenant: sum(s.requeued_by_failure for s in stats)
                 for tenant, stats in self.per_tenant().items()}
 
     def mean_preemption_delay(self) -> float:

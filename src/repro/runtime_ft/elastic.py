@@ -110,8 +110,16 @@ class ElasticFleet:
                       {"data": plan.data, "model": plan.model})
         return plan
 
-    def cluster_spec(self) -> ClusterSpec:
-        """Scheduler view: demoted/slow groups become LITTLE class."""
+    def cluster_spec(self, base_classes=None) -> ClusterSpec:
+        """Scheduler view: demoted/slow groups become LITTLE class.
+
+        ``base_classes`` (one class per group, e.g. the original
+        ``ClusterSpec.classes``) preserves genuinely-LITTLE groups through
+        the rebuild; the default keeps the legacy all-BIG assumption."""
         alive = self.alive_groups()
+        if base_classes is None:
+            return ClusterSpec(classes=tuple(
+                LITTLE if self.state[g].demoted else BIG for g in alive))
         return ClusterSpec(classes=tuple(
-            LITTLE if self.state[g].demoted else BIG for g in alive))
+            LITTLE if self.state[g].demoted else base_classes[g]
+            for g in alive))

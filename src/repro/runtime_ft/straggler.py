@@ -19,6 +19,7 @@ import dataclasses
 
 import numpy as np
 
+from ..core.dag import DEFAULT_IMPL
 from ..core.ptt import PTTRegistry
 
 
@@ -30,6 +31,7 @@ class StragglerReport:
     time: float
     median: float
     ratio: float
+    impl: str = DEFAULT_IMPL
 
 
 class StragglerDetector:
@@ -40,31 +42,43 @@ class StragglerDetector:
         self.z_threshold = z_threshold
         self.min_samples = min_samples
 
-    def scan(self, width: int = 1) -> list[StragglerReport]:
+    def scan(self, width: int | None = 1) -> list[StragglerReport]:
+        """Flag straggling workers from the learned PTT.
+
+        ``width`` selects one resource-partition width (the legacy
+        behavior, default 1); ``width=None`` scans every width the table
+        models.  The PTT stores a separate EWMA block per implementation
+        variant (per-(class, impl) speeds differ, so a group slow on one
+        impl may be healthy on another): each recorded impl is compared
+        against its own cross-fleet median and reported per-impl."""
         reports: list[StragglerReport] = []
         for tao_type in self.ptt.types():
             table = self.ptt.table(tao_type)
             spec = table.spec
-            times, workers = [], []
-            for w in range(spec.n_workers):
-                if table.samples(w, width) >= self.min_samples:
-                    times.append(table.time(w, width))
-                    workers.append(w)
-            if len(times) < 4:
-                continue
-            arr = np.asarray(times)
-            med = float(np.median(arr))
-            mad = float(np.median(np.abs(arr - med))) + 1e-12
-            for w, t in zip(workers, arr):
-                slow_ratio = t > self.ratio_threshold * med
-                slow_z = (t - med) / (1.4826 * mad) > self.z_threshold
-                if slow_ratio and slow_z:
-                    reports.append(StragglerReport(
-                        worker=w, tao_type=tao_type, width=width,
-                        time=float(t), median=med, ratio=float(t / med)))
+            widths = spec.widths if width is None else (width,)
+            for impl in table.impls():
+                for v in widths:
+                    times, workers = [], []
+                    for w in range(spec.n_workers):
+                        if table.samples(w, v, impl) >= self.min_samples:
+                            times.append(table.time(w, v, impl))
+                            workers.append(w)
+                    if len(times) < 4:
+                        continue
+                    arr = np.asarray(times)
+                    med = float(np.median(arr))
+                    mad = float(np.median(np.abs(arr - med))) + 1e-12
+                    for w, t in zip(workers, arr):
+                        slow_ratio = t > self.ratio_threshold * med
+                        slow_z = (t - med) / (1.4826 * mad) > self.z_threshold
+                        if slow_ratio and slow_z:
+                            reports.append(StragglerReport(
+                                worker=w, tao_type=tao_type, width=v,
+                                time=float(t), median=med,
+                                ratio=float(t / med), impl=impl))
         return reports
 
-    def healthy_workers(self, width: int = 1) -> set[int]:
+    def healthy_workers(self, width: int | None = 1) -> set[int]:
         spec = self.ptt.spec
         bad = {r.worker for r in self.scan(width)}
         return set(range(spec.n_workers)) - bad

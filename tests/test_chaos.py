@@ -1,0 +1,294 @@
+"""Chaos engine tests: deterministic fault plans, chunk conservation under
+mid-stream kills on both vehicles, elastic re-admission, recovery, and the
+dead-worker masking chain (PTT queries, policies, admission signals)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ChunkedWork, PTT, Simulator, ThreadedRuntime,
+                        bursty_workload, fleet, hikey960, make_gate,
+                        make_policy, make_preemption, random_dag,
+                        random_workload)
+from repro.core.chaos import (DEGRADE, KILL, RECOVER, ChaosEvent, ChaosPlan,
+                              ChaosPlanBuilder, group_kill_plan)
+
+
+def _trace_key(res):
+    import dataclasses
+    return [dataclasses.astuple(t) for t in res.trace]
+
+
+# ------------------------------------------------------------ plan object --
+def test_plan_builder_sorts_and_validates():
+    plan = (ChaosPlanBuilder()
+            .recover(2.0, [1, 2])
+            .kill(0.5, [1, 2])
+            .degrade(1.0, [3], 0.25)
+            .build())
+    assert [e.action for e in plan.events] == [KILL, DEGRADE, RECOVER]
+    assert plan.targets() == (1, 2, 3)
+    assert plan.max_time() == 2.0
+    assert bool(plan) and len(plan) == 3
+    assert not ChaosPlan()
+
+    with pytest.raises(ValueError):
+        ChaosEvent(at=-1.0, action=KILL, workers=(0,))
+    with pytest.raises(ValueError):
+        ChaosEvent(at=0.0, action="explode", workers=(0,))
+    with pytest.raises(ValueError):
+        ChaosEvent(at=0.0, action=DEGRADE, workers=(0,), speed=0.0)
+
+
+def test_group_kill_plan_helper():
+    plan = group_kill_plan([4, 5, 6, 7], kill_at=0.3, recover_at=1.5)
+    assert [e.action for e in plan.events] == [KILL, RECOVER]
+    assert plan.events[0].workers == (4, 5, 6, 7)
+
+
+# ------------------------------------------------- sim: identity + chaos --
+def test_empty_plan_is_byte_identical():
+    """chaos=None and chaos=ChaosPlan() must take identical code paths —
+    the no-chaos schedule is pinned by repro.core.identity."""
+    def run(chaos):
+        sim = Simulator(fleet(12, 4), make_policy("molding:adaptive"),
+                        seed=9)
+        return sim.run_workload(
+            random_workload(n_dags=5, rate=4.0, n_tasks=50, seed=2),
+            chaos=chaos)
+
+    assert _trace_key(run(None)) == _trace_key(run(ChaosPlan()))
+
+
+def test_sim_chaos_is_deterministic():
+    """Same seed + same plan => byte-identical traces, run to run."""
+    def run():
+        sim = Simulator(fleet(12, 4), make_policy("molding:adaptive"),
+                        seed=9)
+        plan = (ChaosPlanBuilder().kill(0.2, range(4, 8))
+                .recover(1.0, range(4, 8)).build())
+        return sim.run_workload(
+            random_workload(n_dags=5, rate=4.0, n_tasks=50, seed=2),
+            chaos=plan)
+
+    assert _trace_key(run()) == _trace_key(run())
+
+
+def test_sim_conservation_under_group_kill():
+    """Every admitted TAO completes despite a mid-stream group kill: the
+    in-flight TAOs on killed workers are re-admitted (continuations keep
+    their cursor position) and nothing is lost or double-counted."""
+    wl = bursty_workload(seed=1, n_chunks=4)
+    total = sum(len(a.dag) for a in wl.arrivals())
+    sim = Simulator(fleet(48, 16), make_policy("molding:adaptive"), seed=1)
+    plan = (ChaosPlanBuilder().kill(0.55, range(0, 16))
+            .degrade(0.7, range(16, 24), 0.3)
+            .recover(2.5, range(0, 24)).build())
+    res = sim.run_workload(wl, chaos=plan)
+    assert res.completed == total
+    assert all(st.done for st in res.per_dag.values())
+    # no TAO left holding unclaimed chunks
+    assert all(t.cursor is None or t.cursor.unclaimed == 0
+               for a in wl.arrivals() for t in a.dag.nodes)
+    # the kill landed on running work (otherwise the test is vacuous)
+    assert sum(res.failure_requeues_by_tenant().values()) > 0
+    # failure requeues are not policy displacements: no preemption counted
+    assert all(st.preempted_count == 0 for st in res.per_dag.values())
+
+
+def test_sim_killed_workers_absent_then_present_after_recover():
+    wl = bursty_workload(seed=1)
+    sim = Simulator(fleet(48, 16), make_policy("molding:adaptive"), seed=1)
+    plan = (ChaosPlanBuilder().kill(0.5, range(8, 16))
+            .recover(2.0, range(8, 16)).build())
+    res = sim.run_workload(wl, chaos=plan)
+    dead = set(range(8, 16))
+    during = [t for t in res.trace if 0.5 <= t.start and t.end <= 2.0]
+    after = [t for t in res.trace if t.start >= 2.0]
+    assert during, "no segments ran inside the outage window"
+    assert all(not dead & set(t.participants) for t in during)
+    # recovery genuinely returns capacity (segments may use those workers)
+    assert any(dead & set(t.participants) for t in after)
+
+
+def test_sim_degrade_slows_and_recovers():
+    """A degraded pool finishes later; after RECOVER the same workload on
+    the same simulator seed matches the healthy makespan again."""
+    def run(plan):
+        sim = Simulator(hikey960(), make_policy("homogeneous"), seed=3)
+        return sim.run(random_dag(80, target_degree=3.0, seed=5), chaos=plan)
+
+    healthy = run(None)
+    slowed = run(ChaosPlanBuilder().degrade(0.0, range(8), 0.25).build())
+    assert slowed.makespan > healthy.makespan * 2
+
+
+# ------------------------------------- satellite 2: failed-worker leakage --
+def test_ptt_queries_mask_dead_workers():
+    """best_leader/cluster_time/best_width must never surface a dead
+    worker, in both fast-query and scan modes, and must heal when the
+    mask clears — with aggregates still exact (no stale fast caches)."""
+    for fast in (True, False):
+        t = PTT(hikey960(), fast_query=fast)
+        for w in range(8):
+            t.record(w, 1, 10.0 - w)   # worker 7 is globally best
+        assert t.best_leader(1)[0] == 7
+        t.set_excluded(frozenset({7, 6}))
+        leader, tm = t.best_leader(1)
+        assert leader == 5 and tm == pytest.approx(5.0)
+        # cluster_time over the big cluster ignores dead members
+        t2 = t.cluster_time([6, 7], 1)
+        assert t2 == 0.0               # every candidate dead => untried
+        # records landed while masked still update the aggregates...
+        t.record(7, 1, 0.5)
+        # ...so clearing the mask restores exact fast-path answers
+        t.set_excluded(frozenset())
+        assert t.best_leader(1)[0] == 7
+
+
+def test_eligible_leaders_exclude_and_identity():
+    spec = hikey960()
+    base = spec.eligible_leaders(2)
+    # empty mask returns the SAME cached tuple object (RNG/identity path)
+    assert spec.eligible_leaders(2, exclude=()) is base
+    masked = spec.eligible_leaders(2, exclude=frozenset({3}))
+    assert masked == tuple(c for c in base if c != 2)  # place [2,3] dies
+
+
+def test_simulator_fail_worker_masks_placement_immediately():
+    """The failed-worker-leakage regression: between fail_worker and the
+    next run, PTT fast-query caches and dispatch sets must already
+    exclude the corpse — no TAO may list it as leader or participant."""
+    sim = Simulator(hikey960(), make_policy("molding:adaptive"), seed=4)
+    sim.run(random_dag(60, target_degree=3.0, seed=0))   # learn a profile
+    sim.fail_worker(2)
+    assert sim.core.dead_workers() == frozenset({2})
+    res = sim.run(random_dag(60, target_degree=3.0, seed=1))
+    # the dead worker never participates; DPA may still *name* it as the
+    # leader cell of a wider place (leader = leader_of(popper, width)), in
+    # which case the leader-only PTT record is skipped — so no width-1
+    # segment (leader == sole participant) can sit on the corpse
+    assert all(2 not in t.participants for t in res.trace)
+    assert all(t.leader != 2 for t in res.trace if t.width == 1)
+    sim.recover_worker(2)
+    assert sim.core.dead_workers() == frozenset()
+
+
+def test_admission_signals_shrink_with_dead_workers():
+    sim = Simulator(hikey960(), make_policy("molding:adaptive"), seed=0)
+    assert sim.core.admission_signals().n_workers == 8
+    sim.fail_worker(1)
+    sim.fail_worker(2)
+    sig = sim.core.admission_signals()
+    assert sig.n_workers == 6 and sig.n_failed == 2
+    # the SLO-adaptive gate's backlog limit scales with surviving capacity
+    gate = make_gate("slo-adaptive", slo=0.5, headroom=2.0)
+    assert gate.headroom * sig.n_workers < gate.headroom * 8
+    sim.reset_faults()
+    assert sim.core.admission_signals().n_workers == 8
+
+
+# ----------------------------------------------------- threaded: chaos ----
+def _counting_workload(n_chunks=4):
+    counts: dict = {}
+    lock = threading.Lock()
+    wl = bursty_workload(n_steady=4, steady_rate=15.0, steady_tasks=15,
+                         n_burst=5, burst_at=0.05, burst_rate=200.0,
+                         burst_tasks=40, seed=2, n_chunks=n_chunks)
+    for arr in wl:
+        for node in arr.dag.nodes:
+            def fn(i, key=(arr.dag_id, node.id)):
+                with lock:
+                    counts[(key, i)] = counts.get((key, i), 0) + 1
+                time.sleep(0.0005)
+            node.work = ChunkedWork(fn, n_chunks)
+    return wl, counts
+
+
+def test_threaded_conservation_under_kill_and_recover():
+    """Wall-clock smoke: a mid-stream kill + degrade + recover must lose
+    no chunk and replay no chunk (claimed chunks complete exactly once;
+    unclaimed chunks are re-admitted exactly once)."""
+    wl, counts = _counting_workload()
+    total = sum(len(a.dag) for a in wl.arrivals())
+    rt = ThreadedRuntime(hikey960(), make_policy("molding:weight"), seed=2)
+    plan = (ChaosPlanBuilder().kill(0.05, [4, 5]).degrade(0.05, [6], 0.3)
+            .recover(0.5, [4, 5, 6]).build())
+    res = rt.run_workload(wl, timeout_s=60.0, chaos=plan)
+    assert res.completed == total
+    dup = {k: c for k, c in counts.items() if c != 1}
+    assert not dup, f"replayed chunks: {list(dup)[:5]}"
+    assert len(counts) == total * 4
+
+
+def test_threaded_chaos_with_gate_and_preemption():
+    """The full control plane composes: gate + controller + chaos on one
+    run, still conserving every admitted chunk exactly once."""
+    wl, counts = _counting_workload()
+    rt = ThreadedRuntime(hikey960(), make_policy("molding:adaptive"), seed=1)
+    plan = (ChaosPlanBuilder().kill(0.05, [4, 5])
+            .recover(0.5, [4, 5]).build())
+    res = rt.run_workload(
+        wl, timeout_s=60.0,
+        admission=make_gate("slo-adaptive", slo=0.12,
+                            slo_per_tenant={"burst": 0.6}, headroom=16.0),
+        preemption=make_preemption("backlog"), chaos=plan)
+    admitted = [s for s in res.per_dag.values() if s.was_admitted]
+    assert res.completed == sum(s.n_taos for s in admitted)
+    dup = {k: c for k, c in counts.items() if c != 1}
+    assert not dup
+    assert len(counts) == sum(s.n_taos for s in admitted) * 4
+
+
+def test_threaded_no_chaos_unaffected():
+    """chaos=None keeps the runtime on the pre-chaos code paths (no dead
+    set, no per-chunk timing) and completes normally."""
+    wl, counts = _counting_workload(n_chunks=2)
+    total = sum(len(a.dag) for a in wl.arrivals())
+    rt = ThreadedRuntime(hikey960(), make_policy("molding:weight"), seed=2)
+    res = rt.run_workload(wl, timeout_s=60.0)
+    assert res.completed == total
+    assert len(counts) == total * 2
+
+
+# ------------------------------------------- straggler scan (all widths) --
+def test_straggler_scan_all_widths_and_impls():
+    from repro.core import DEFAULT_IMPL
+    from repro.runtime_ft.straggler import StragglerDetector
+    from repro.core.ptt import PTTRegistry
+
+    spec = fleet(16, 0)
+    reg = PTTRegistry(spec)
+    t = reg.table("matmul")
+    for w in range(16):
+        for v in (1, 2):
+            for _ in range(4):
+                t.record(w, v, 1.0 if w != 5 else 40.0)
+                t.record(w, v, 1.0 if w != 5 else 40.0, impl="pallas")
+    det = StragglerDetector(reg)
+    # legacy call: width=1 only
+    r1 = det.scan(width=1)
+    assert {r.worker for r in r1} == {5}
+    assert {r.width for r in r1} == {1}
+    # full scan: both widths, both impls, still exactly worker 5
+    r_all = det.scan(width=None)
+    assert {r.worker for r in r_all} == {5}
+    assert {r.width for r in r_all} >= {1, 2}
+    assert {r.impl for r in r_all} == {DEFAULT_IMPL, "pallas"}
+    assert det.healthy_workers(width=None) == set(range(16)) - {5}
+
+
+def test_elastic_cluster_spec_preserves_base_classes():
+    from repro.core import BIG, LITTLE
+    from repro.runtime_ft.elastic import ElasticFleet
+
+    f = ElasticFleet(n_groups=8, model_parallel=2, grace=1.0)
+    for g in range(8):
+        f.observe(g, now=0.0)
+    f.demote(3)
+    base = (BIG,) * 6 + (LITTLE,) * 2       # groups 6,7 genuinely little
+    spec = f.cluster_spec(base_classes=base)
+    assert spec.classes == (BIG, BIG, BIG, LITTLE, BIG, BIG, LITTLE, LITTLE)
+    # legacy default keeps the all-BIG assumption
+    assert f.cluster_spec().classes == \
+        (BIG, BIG, BIG, LITTLE, BIG, BIG, BIG, BIG)

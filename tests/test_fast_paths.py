@@ -239,6 +239,35 @@ def test_reset_faults_restores_pristine_pool():
     assert any(3 in t.participants for t in r2.trace)
 
 
+def test_reset_learning_keeps_faults_reset_faults_restores_identity():
+    """A/B-leg contract: ``reset_learning()`` (the between-legs reset)
+    models the same *hardware* across legs, so injected faults survive it;
+    ``reset_faults()`` models repaired metal, after which the schedule must
+    be byte-identical to a simulator that was never faulted at all."""
+    def dag(seed):
+        return random_dag(60, target_degree=3.0, seed=seed, width_hint=2)
+
+    sim = Simulator(hikey960(), make_policy("molding:adaptive"), seed=4)
+    sim.fail_worker(2)
+    sim.set_speed_multiplier(6, 0.3)
+    sim.run(dag(0))
+    # leg boundary: learning reset, hardware state kept
+    sim.reset_learning()
+    assert 2 in sim.failed and sim.speed_mult[6] == 0.3
+    r_faulty = sim.run(dag(1))
+    assert all(2 not in t.participants for t in r_faulty.trace)
+    # repaired metal + fresh learning == a pristine simulator, byte for byte
+    sim.reset_faults()
+    sim.reset_learning()
+    r_repaired = sim.run(dag(2))
+    pristine = Simulator(hikey960(), make_policy("molding:adaptive"), seed=4)
+    pristine.reset_learning()   # same number of reseeds as the faulted sim
+    pristine.reset_learning()
+    r_pristine = pristine.run(dag(2))
+    assert _trace_key(r_repaired) == _trace_key(r_pristine)
+    assert r_repaired.makespan == r_pristine.makespan
+
+
 # --------------------------------------------------- threaded idle parking --
 def test_threaded_single_worker_pool_completes():
     """n=1 has no other worker to steal from: the self-steal fix must skip
