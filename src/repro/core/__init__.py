@@ -6,10 +6,11 @@ from .admission import (ALL_GATE_NAMES, AdmissionDecision, AdmissionGate,
                         SloAdaptiveGate, TokenBucketGate, make_gate)
 from .chaos import (DEGRADE, KILL, RECOVER, ChaosEvent, ChaosPlan,
                     ChaosPlanBuilder, group_kill_plan)
-from .dag import DEFAULT_IMPL, TAO, ImplVariant, TaoDag, chain
+from .dag import DEFAULT_IMPL, TAO, DataFootprint, ImplVariant, TaoDag, chain
 from .dag_gen import (KERNEL_TYPES, bursty_workload, paper_dags, random_dag,
                       random_workload)
 from .identity import trace_signature
+from .locality import LocalityTracker, replay_moved_bytes
 from .places import (BIG, LITTLE, ClusterSpec, fleet, hikey960, homogeneous,
                      leader_of, place_members, valid_widths)
 from .policies import (ALL_POLICY_NAMES, AdaptivePolicy,
@@ -29,7 +30,8 @@ from .workload import (DagArrival, DagStats, Workload, WorkloadResult,
                        percentile)
 
 __all__ = [
-    "DEFAULT_IMPL", "ImplVariant",
+    "DEFAULT_IMPL", "DataFootprint", "ImplVariant",
+    "LocalityTracker", "replay_moved_bytes",
     "TAO", "TaoDag", "chain", "KERNEL_TYPES", "paper_dags", "random_dag",
     "random_workload", "bursty_workload",
     "ALL_GATE_NAMES", "AdmissionDecision", "AdmissionGate",

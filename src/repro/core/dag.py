@@ -26,6 +26,44 @@ from typing import Any, Callable, Iterable, Sequence
 DEFAULT_IMPL = "default"
 
 
+@dataclasses.dataclass
+class DataFootprint:
+    """The data a TAO touches, for locality-aware placement (arXiv:2502.06304).
+
+    ``nbytes`` is the operand/cache size the TAO reads; ``resident`` is the
+    *cluster index* (a position in ``ClusterSpec.clusters()``) currently
+    holding that data, with ``-1`` meaning "not materialised yet" — the first
+    execution stamps residency on whatever cluster ran it.  ``sticky`` data
+    stays resident where it was materialised even when a TAO executes
+    elsewhere (a KV cache pinned to the cluster that ran prefill, streamed on
+    off-cluster decodes); movable data migrates with the compute (a training
+    operand that re-shards onto the executing cluster).
+
+    The object is deliberately *shared and mutable*: every TAO of one serving
+    request (prefill + its decode chain) carries the same instance, so the
+    residency the prefill stamps at dispatch time is what the decode TAOs'
+    placement decisions later read.  ``home`` is the pre-pinned residency a
+    constructor may declare (a shard-local training operand lives on its
+    shard's cluster before any TAO runs); ``reset()`` — called per run by
+    ``TaoDag.reset_execution_state`` — rewinds ``resident`` to it, so re-runs
+    of one workload re-materialise cleanly while pre-pins survive.  TAOs
+    without a footprint take the exact legacy scheduling path.
+    """
+
+    nbytes: float
+    resident: int = -1
+    sticky: bool = True
+    home: int = -1
+
+    def __post_init__(self) -> None:
+        if self.resident < 0 and self.home >= 0:
+            self.resident = self.home
+
+    def reset(self) -> None:
+        """Rewind run-time residency to the pre-pinned ``home`` (or unset)."""
+        self.resident = self.home
+
+
 @dataclasses.dataclass(frozen=True)
 class ImplVariant:
     """One named implementation alternative of a TAO (arXiv:2108.13871).
@@ -81,6 +119,11 @@ class TAO:
     # wake-up.  Continuations keep their impl: chunk state is impl-specific.
     impls: tuple = ()
     assigned_impl: str = DEFAULT_IMPL
+    # data footprint for locality-aware placement; ``None`` (the default)
+    # keeps the TAO on the exact legacy scheduling path.  Workload data like
+    # ``impls``/``work`` — reset_execution_state only rewinds its run-time
+    # residency (DataFootprint.reset), never detaches it.
+    footprint: "DataFootprint | None" = None
 
     # -- implementation variants ------------------------------------------
     def impl_names(self) -> tuple:
@@ -208,6 +251,8 @@ class TaoDag:
             n.assigned_leader = -1
             n.cursor = None
             n.assigned_impl = n.impls[0].name if n.impls else DEFAULT_IMPL
+            if n.footprint is not None:
+                n.footprint.reset()  # idempotent for shared footprints
 
     def validate(self) -> None:
         self.topological()  # raises on cycle

@@ -46,6 +46,10 @@ PINNED_SIGNATURES = {
     "dag.weight": "b8248ad835a1fbbf",
     "workload.molding:adaptive": "e8fbf42f2a96a319",
     "serve.molding:weight": "8141e2b0f80ad324",
+    # locality-off leg (kv_bytes_per_token=0.0 explicitly): every TAO is
+    # footprint-free, so the data-aware layer must be invisible — same
+    # signature as the pre-locality serve pin by construction.
+    "serve.locality-off": "8141e2b0f80ad324",
 }
 
 DAG_PIN_POLICIES = ("adaptive", "crit-ptt", "homogeneous", "molding:adaptive",
@@ -87,6 +91,25 @@ def serve_pin_trace():
     return st.result.trace
 
 
+def locality_off_pin_trace():
+    """The serving reference run with affinity explicitly OFF -> its trace.
+
+    Identical config to :func:`serve_pin_trace` but with
+    ``kv_bytes_per_token=0.0`` passed explicitly — exercising the
+    locality-era signature (footprint construction skipped, penalties
+    ``None``) rather than the default path.  Must reproduce the
+    pre-locality serve pin byte for byte.
+    """
+    from .places import hikey960
+    from .policies import make_policy
+    from .serve_orchestrator import bursty_serving_trace, simulate_serving
+
+    st = simulate_serving(bursty_serving_trace(seed=1), hikey960(),
+                          make_policy("molding:weight"), seed=1, n_chunks=4,
+                          kv_bytes_per_token=0.0)
+    return st.result.trace
+
+
 def all_pin_signatures() -> dict:
     """Recompute every pinned configuration's signature on the live stack."""
     out = {}
@@ -94,6 +117,7 @@ def all_pin_signatures() -> dict:
         out[f"dag.{pol}"] = trace_signature(dag_pin_trace(pol))
     out["workload.molding:adaptive"] = trace_signature(workload_pin_trace())
     out["serve.molding:weight"] = trace_signature(serve_pin_trace())
+    out["serve.locality-off"] = trace_signature(locality_off_pin_trace())
     return out
 
 

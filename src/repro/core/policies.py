@@ -138,6 +138,35 @@ def _alive_pool(ctx, pool):
     return alive or pool
 
 
+def _move_penalty(tao: TAO, ctx) -> tuple | None:
+    """Per-cluster movement-cost vector for this TAO's data footprint.
+
+    ``None`` — the overwhelmingly common case: no footprint, residency not
+    yet materialised, no :class:`~repro.core.locality.LocalityTracker` on the
+    context, or affinity charging switched off — is the signal to take the
+    exact legacy decision path.  Zero-footprint TAOs pay a single attribute
+    read here and nothing else (pinned-signature requirement)."""
+    fp = tao.footprint
+    if fp is None:
+        return None
+    loc = getattr(ctx, "locality", None)
+    if loc is None:
+        return None
+    return loc.penalties(tao.type, fp)
+
+
+def _class_penalties(ctx, penalty: Sequence[float]) -> tuple:
+    """Collapse the per-cluster penalty vector to ``(p_big, p_little)`` for
+    the cluster-mean policies (optimistic min when a class spans several
+    clusters; exact on the contiguous-run specs where class == cluster)."""
+    loc = ctx.locality
+    p_big = min((penalty[c] for c in loc.clusters_of_class(BIG)),
+                default=0.0)
+    p_little = min((penalty[c] for c in loc.clusters_of_class(LITTLE)),
+                   default=0.0)
+    return p_big, p_little
+
+
 def _clamp_width(spec: ClusterSpec, width: int) -> int:
     """Round down to a valid power-of-two width (mirrors the core's clamp,
     needed here so joint queries address real PTT cells)."""
@@ -259,10 +288,15 @@ class CriticalityPTTPolicy(Policy):
     def place(self, tao: TAO, ctx: SchedulerContext, waker: int) -> Placement:
         width = tao.width_hint
         names = _variant_names(tao)
+        penalty = _move_penalty(tao, ctx)
         if len(names) == 1:
             if _is_critical(tao, ctx):
                 table = ctx.ptt.table(tao.type)
-                leader, _t = table.best_leader(width, impl=names[0])
+                if penalty is None:
+                    leader, _t = table.best_leader(width, impl=names[0])
+                else:
+                    leader, _t = table.best_leader_penalized(
+                        width, penalty, impl=names[0])
                 if leader is not None:
                     return Placement(target=leader, width=width,
                                      impl=names[0])
@@ -273,8 +307,12 @@ class CriticalityPTTPolicy(Policy):
         cw = _clamp_width(ctx.spec, width)
         if _is_critical(tao, ctx):
             # fully joint: best (impl, leader) cell for the width, untried
-            # cells first (impl-major) unless the tenant is damped
-            if explore:
+            # cells first (impl-major) unless the tenant is damped; footprint
+            # TAOs charge the movement cost inside the cell comparison
+            if explore and penalty is not None:
+                impl, leader, _t = table.best_cell_penalized(cw, names,
+                                                             penalty)
+            elif explore:
                 impl, leader, _t = table.best_cell(cw, names)
             else:
                 impl, leader = None, None
@@ -356,10 +394,15 @@ class WeightBasedPolicy(Policy):
         if not bigs or not littles:  # homogeneous pool: nothing to bias
             return Placement(target=waker, width=width, impl=names[0])
         table = ctx.ptt.table(tao.type)
+        penalty = _move_penalty(tao, ctx)
         if len(names) > 1:
-            return self._place_joint(tao, ctx, table, names, width)
+            return self._place_joint(tao, ctx, table, names, width,
+                                     penalty=penalty)
         impl = names[0]
         t_big, t_little = self._cluster_times(table, spec, width, impl)
+        if penalty is not None:
+            return self._place_affine(tao, ctx, t_big, t_little, width, impl,
+                                      penalty)
         # zero-init exploration: measure the untried cluster first
         if t_big == 0.0 and t_little == 0.0:
             pool = bigs if ctx.rng.random() < 0.5 else littles
@@ -373,9 +416,41 @@ class WeightBasedPolicy(Policy):
                              width=width, impl=impl)
         return self._biased(tao, ctx, t_big, t_little, width, impl)
 
+    def _place_affine(self, tao: TAO, ctx: SchedulerContext, t_big: float,
+                      t_little: float, width: int, impl: str,
+                      penalty: Sequence[float]) -> Placement:
+        """Placement for a TAO whose data is resident somewhere.
+
+        Fully-measured clusters go through the weight decision on
+        *effective* times (compute + movement); while either cluster is
+        unmeasured, exploration is affinity-first — the TAO runs where its
+        data lives (the cheapest-penalty pool), so the resident cluster gets
+        measured and the data never moves just to fill a PTT cell.  Remote
+        cells still get measured through steals and rescue redirects, which
+        is when paying the move is already justified."""
+        p_big, p_little = _class_penalties(ctx, penalty)
+        if t_big > 0.0 and t_little > 0.0:
+            return self._biased(tao, ctx, t_big, t_little, width, impl,
+                                penalty2=(p_big, p_little))
+        if p_big < p_little:
+            pool = ctx.spec.big_workers
+        elif p_little < p_big:
+            pool = ctx.spec.little_workers
+        else:  # equidistant (or zero-cost): fall back to measured preference
+            pool = (ctx.spec.big_workers if t_big > 0.0
+                    else ctx.spec.little_workers)
+        return Placement(target=ctx.rng.choice(_alive_pool(ctx, pool)),
+                         width=width, impl=impl)
+
     def _biased(self, tao: TAO, ctx: SchedulerContext, t_big: float,
-                t_little: float, width: int, impl: str) -> Placement:
-        """The weight-vs-threshold decision for fully-measured times."""
+                t_little: float, width: int, impl: str,
+                penalty2: tuple | None = None) -> Placement:
+        """The weight-vs-threshold decision for fully-measured times.
+
+        ``penalty2 = (p_big, p_little)`` movement costs make the *decision*
+        weight the ratio of effective times; the threshold EWMA still blends
+        the pure compute weight, so footprint-specific movement costs never
+        pollute the learned compute profile."""
         weight = t_little / t_big
         # adaptive threshold: EWMA 1:6 toward the mean weight of the system.
         # Read and blend atomically (the decision below uses the pre-update
@@ -385,13 +460,18 @@ class WeightBasedPolicy(Policy):
             threshold = self._threshold(tao)
             self._store_threshold(tao, (weight + self.OLD_WEIGHT * threshold)
                                   / (self.OLD_WEIGHT + 1))
-        goes_big = self._goes_big(tao, ctx, weight, threshold)
+        decide = weight
+        if penalty2 is not None:
+            p_big, p_little = penalty2
+            decide = (t_little + p_little) / (t_big + p_big)
+        goes_big = self._goes_big(tao, ctx, decide, threshold)
         pool = ctx.spec.big_workers if goes_big else ctx.spec.little_workers
         return Placement(target=ctx.rng.choice(_alive_pool(ctx, pool)),
                          width=width, impl=impl)
 
     def _place_joint(self, tao: TAO, ctx: SchedulerContext, table: PTT,
-                     names: Sequence[str], width: int) -> Placement:
+                     names: Sequence[str], width: int,
+                     penalty: Sequence[float] | None = None) -> Placement:
         """Joint variant x cluster decision for multi-variant TAOs.
 
         Exploration is impl-major in declared order (the per-variant analogue
@@ -405,6 +485,27 @@ class WeightBasedPolicy(Policy):
         spec = ctx.spec
         bigs, littles = spec.big_workers, spec.little_workers
         explore = _damp_level(tao, ctx) == 0
+        if penalty is not None:
+            # joint decision under data gravity: fully-measured variants
+            # compete on effective (compute + movement) times; with nothing
+            # fully measured, affinity-first exploration places the first
+            # variant where the data lives (see _place_affine)
+            p_big, p_little = _class_penalties(ctx, penalty)
+            measured = []
+            for impl in names:
+                t_big, t_little = self._cluster_times(table, spec, width,
+                                                      impl)
+                if t_big > 0.0 and t_little > 0.0:
+                    measured.append((min(t_big + p_big, t_little + p_little),
+                                     t_big, t_little, impl))
+            if measured:
+                _best, t_big, t_little, impl = min(measured)
+                return self._biased(tao, ctx, t_big, t_little, width, impl,
+                                    penalty2=(p_big, p_little))
+            impl = names[0]
+            t_big, t_little = self._cluster_times(table, spec, width, impl)
+            return self._place_affine(tao, ctx, t_big, t_little, width,
+                                      impl, penalty)
         measured = []
         for impl in names:
             t_big, t_little = self._cluster_times(table, spec, width, impl)

@@ -107,7 +107,8 @@ class _ImplBlock:
     per (class, impl) cell.
     """
 
-    __slots__ = ("_t", "_n", "_cls_sum", "_cls_cnt", "_cursor", "_best")
+    __slots__ = ("_t", "_n", "_cls_sum", "_cls_cnt", "_cursor", "_best",
+                 "_ccur", "_cbest")
 
     def __init__(self, spec: ClusterSpec, fast_query: bool):
         self._t = np.zeros((spec.n_workers, len(spec.widths)), dtype=np.float64)
@@ -122,6 +123,11 @@ class _ImplBlock:
             # per width: (time, rank, worker) of the fastest tried leader, or
             # None when unknown/invalidated (lazily recomputed on query)
             self._best: list = [None] * nw
+            # per-cluster twins of cursor/best, serving the locality-penalised
+            # queries: [width][cluster] untried cursor and lazy best cache
+            nc = len(spec.clusters())
+            self._ccur = [[0] * nc for _ in range(nw)]
+            self._cbest: list = [[None] * nc for _ in range(nw)]
 
 
 class PTT:
@@ -144,6 +150,21 @@ class PTT:
             # the very same tuple object on every call.
             self._groups = tuple(
                 (spec.workers_of(c), c) for c in dict.fromkeys(spec.classes))
+        # cluster topology for the locality-penalised queries: worker ->
+        # cluster index, and per (width, cluster) the eligible leaders with
+        # their global candidate ranks (clusters are contiguous class runs,
+        # so per-cluster rank order is consistent with the global scan order)
+        clusters = spec.clusters()
+        cluster_of = [0] * spec.n_workers
+        for ci, (_cls, workers) in enumerate(clusters):
+            for w in workers:
+                cluster_of[w] = ci
+        self._cluster_of = tuple(cluster_of)
+        self._celig = [
+            tuple([(leader // w, leader) for leader in elig
+                   if cluster_of[leader] == ci]
+                  for ci in range(len(clusters)))
+            for w, elig in zip(spec.widths, self._eligible)]
         # impl name -> its cell block; the legacy variant exists from birth so
         # single-impl paths never pay the creation branch.
         self._blocks: dict = {DEFAULT_IMPL: _ImplBlock(spec, fast_query)}
@@ -159,6 +180,11 @@ class PTT:
     def impls(self) -> tuple:
         """Impl names with materialised cell blocks (recorded *or* queried)."""
         return tuple(self._blocks)
+
+    @property
+    def excluded(self) -> frozenset:
+        """The current dead-worker mask (empty when all workers are live)."""
+        return self._excluded
 
     def set_excluded(self, excluded: frozenset) -> None:
         """Mask ``excluded`` workers out of every placement query.
@@ -219,16 +245,28 @@ class PTT:
             return
         rank = worker // width
         best = blk._best[wi]
-        if best is None:
+        if best is not None:
+            t_b, r_b, w_b = best
+            if worker == w_b:
+                if new <= t_b:
+                    blk._best[wi] = (new, r_b, w_b)  # improved: still best
+                else:
+                    blk._best[wi] = None             # worsened: lazy recompute
+            elif (new, rank) < (t_b, r_b):
+                blk._best[wi] = (new, rank, worker)
+        # per-cluster twin (locality-penalised queries), same lazy discipline
+        ci = self._cluster_of[worker]
+        cbest = blk._cbest[wi][ci]
+        if cbest is None:
             return                     # already dirty; recomputed on query
-        t_b, r_b, w_b = best
-        if worker == w_b:
-            if new <= t_b:
-                blk._best[wi] = (new, r_b, w_b)   # improved: still the best
+        t_c, r_c, w_c = cbest
+        if worker == w_c:
+            if new <= t_c:
+                blk._cbest[wi][ci] = (new, r_c, w_c)
             else:
-                blk._best[wi] = None              # worsened: lazy recompute
-        elif (new, rank) < (t_b, r_b):
-            blk._best[wi] = (new, rank, worker)
+                blk._cbest[wi][ci] = None
+        elif (new, rank) < (t_c, r_c):
+            blk._cbest[wi][ci] = (new, rank, worker)
 
     # -- queries -----------------------------------------------------------
     def time(self, worker: int, width: int, impl: str = DEFAULT_IMPL) -> float:
@@ -296,6 +334,103 @@ class PTT:
                            for r, c in enumerate(elig))
                 blk._best[wi] = best
             return (best[2], best[0])
+
+    # -- locality-penalised queries ---------------------------------------
+    def best_leader_penalized(self, width: int, penalty: Sequence[float],
+                              impl: str = DEFAULT_IMPL,
+                              candidates: Iterable[int] | None = None):
+        """``best_leader`` charging ``penalty[cluster_of(leader)]`` seconds
+        on top of each cell — the data-movement cost of placing a footprint
+        TAO off its resident cluster (arXiv:2502.06304).
+
+        Untried cells still cost their cluster's penalty (an untried remote
+        leader can lose to a tried local one: affinity holds unless the
+        remote cluster is genuinely worth the move), so exploration is
+        affinity-shaped rather than unconditional.  Returns ``(leader,
+        raw_time)`` with raw_time==0.0 flagging an untried pick.  The fast
+        path is O(#clusters) over per-cluster cursor/best caches; the scan
+        baseline (``fast_query=False``, dead-masked, or explicit candidates)
+        picks identically — min ``(time + penalty, candidate-rank)``.
+        """
+        leader, t, _cost = self._penalized_pick(width, penalty, impl,
+                                                candidates)
+        return (leader, t)
+
+    def _penalized_pick(self, width: int, penalty: Sequence[float],
+                        impl: str, candidates: Iterable[int] | None):
+        """Internal: returns ``(leader, raw_time, penalised_cost)``."""
+        wi = self.spec.width_index(width)
+        blk = self._block(impl)
+        dead = self._excluded
+        if self.fast_query and candidates is None and not dead:
+            return self._penalized_pick_fast(blk, wi, penalty)
+        if candidates is None:
+            candidates = self._elig_alive[wi]
+        best = (None, math.inf, math.inf)
+        for c in candidates:
+            if leader_of(c, width) != c:
+                continue
+            if dead and any(m in dead for m in range(c, c + width)):
+                continue
+            t = float(blk._t[c, wi])
+            cost = t + penalty[self._cluster_of[c]]
+            if cost < best[2]:         # strict <: first (lowest rank) wins
+                best = (c, t, cost)
+        return best
+
+    def _penalized_pick_fast(self, blk: _ImplBlock, wi: int,
+                             penalty: Sequence[float]):
+        """O(#clusters) penalised pick: each cluster contributes its first
+        untried leader (cost = penalty alone) or its cached best tried cell
+        (cost = time + penalty); min ``(cost, rank)`` across clusters matches
+        the scan baseline exactly (within a cluster, any untried cell beats
+        every tried one on cost since EWMA times are >= MIN_ELAPSED)."""
+        best = (math.inf, math.inf, None, math.inf)  # cost, rank, leader, t
+        with self._lock:
+            t_col = blk._t[:, wi]
+            for ci, elig in enumerate(self._celig[wi]):
+                if not elig:
+                    continue
+                cur = blk._ccur[wi][ci]
+                while cur < len(elig) and t_col[elig[cur][1]] != 0.0:
+                    cur += 1           # monotone: cells never revert untried
+                blk._ccur[wi][ci] = cur
+                if cur < len(elig):
+                    rank, leader = elig[cur]
+                    cand = (penalty[ci], rank, leader, 0.0)
+                else:
+                    cbest = blk._cbest[wi][ci]
+                    if cbest is None:  # invalidated: rescan this cluster only
+                        cbest = min((float(t_col[ld]), r, ld)
+                                    for r, ld in elig)
+                        blk._cbest[wi][ci] = cbest
+                    t_c, r_c, l_c = cbest
+                    cand = (t_c + penalty[ci], r_c, l_c, t_c)
+                if cand[:2] < best[:2]:
+                    best = cand
+        if best[2] is None:
+            return (None, math.inf, math.inf)
+        return (best[2], best[3], best[0])
+
+    def best_cell_penalized(self, width: int, impls: Sequence[str],
+                            penalty: Sequence[float],
+                            candidates: Iterable[int] | None = None):
+        """Joint ``(impl, leader)`` minimum of penalised cost for ``width``.
+
+        Unlike :meth:`best_cell`'s impl-major exploration, untried cells
+        here compete at their cluster's penalty (see
+        :meth:`best_leader_penalized`); ties break in declared variant
+        order.  Returns ``(impl, leader, raw_time)``.
+        """
+        best = (None, None, math.inf, math.inf)  # impl, leader, t, cost
+        for name in impls:
+            leader, t, cost = self._penalized_pick(width, penalty, name,
+                                                   candidates)
+            if leader is None:
+                continue
+            if cost < best[3]:         # strict <: first variant wins ties
+                best = (name, leader, t, cost)
+        return (best[0], best[1], best[2])
 
     def cluster_time(self, workers: Iterable[int], width: int,
                      impl: str = DEFAULT_IMPL) -> float:
@@ -434,6 +569,11 @@ class PTTRegistry:
                         tbl.set_excluded(self._excluded)
                     self._tables[tao_type] = tbl
         return tbl
+
+    @property
+    def excluded(self) -> frozenset:
+        """The registry-wide dead-worker mask (see :meth:`set_excluded`)."""
+        return self._excluded
 
     def set_excluded(self, excluded: frozenset) -> None:
         """Propagate the dead-worker mask to every (current and future)

@@ -179,6 +179,7 @@ class ThreadedRuntime:
         self._dead_workers: set[int] = set()
         self._speed_scale = [1.0] * n          # DEGRADE sleep-scaling
         self._chaos = None                     # active ChaosPlan or None
+        self._scratch: bytearray | None = None  # measured-transfer buffer
 
     # ------------------------------------------------------------------ admin
     def _begin_run(self, total: int) -> None:
@@ -376,6 +377,25 @@ class ThreadedRuntime:
         self.core.release(tao, count_displacement=False)
         self._enqueue_ready(tao, waker=worker)
 
+    _COPY_CAP = 1 << 26   # 64 MiB: misses pay the real copy up to this cap
+
+    def _measured_copy(self, nbytes: float) -> tuple[float, float]:
+        """Timed host byte-copy standing in for a cross-cluster device-put.
+
+        Copies ``min(nbytes, _COPY_CAP)`` bytes and returns
+        ``(bytes_copied, elapsed_s)`` — the tracker normalizes to
+        seconds-per-byte, so a capped copy still yields the true rate
+        while bounding the probe's cost on pathological footprints; below
+        the cap a miss genuinely pays the full move on the popping
+        worker's wall clock, the physics the affinity A/B measures."""
+        n = int(min(max(nbytes, 1.0), self._COPY_CAP))
+        buf = self._scratch
+        if buf is None or len(buf) < n:
+            buf = self._scratch = bytearray(n)
+        t0 = time.perf_counter()
+        bytes(memoryview(buf)[:n])
+        return float(n), max(time.perf_counter() - t0, 1e-9)
+
     def _dpa_distribute(self, tao: TAO, popper: int) -> None:
         """Dynamic Place Allocation: push into members' assembly queues."""
         width = tao.assigned_width
@@ -387,6 +407,26 @@ class ThreadedRuntime:
         # pass through unchanged)
         tao.assigned_leader = leader
         self.core.rebind_impl(tao, leader)
+        # data-aware accounting at the realized leader: exactly one
+        # tracker.place per dispatch, and each dispatch yields exactly one
+        # trace record (final, or preempted via the requeue paths) — the
+        # replay_moved_bytes conservation contract.  A miss pays a *measured*
+        # host byte-copy (the device-put analogue on this vehicle) that
+        # feeds the per-(class, src, dst) movement table.
+        fp = tao.footprint
+        if fp is not None:
+            loc = self.core.locality
+            fp_src = fp.resident
+            fp_hit, fp_moved, _ = loc.place(tao.type, fp, leader)
+            if not fp_hit:
+                n_copied, copy_s = self._measured_copy(fp_moved)
+                loc.record_transfer(tao.type, fp_src, loc.cluster_of(leader),
+                                    n_copied, copy_s)
+            if self._wl_stats is not None:
+                st_fp = self._wl_stats.get(tao.dag_id)
+                if st_fp is not None:
+                    with self._stats_lock:
+                        st_fp.record_locality(fp_hit, fp_moved)
         # snapshot the dead set: membership (and remaining_members) must be
         # consistent for this segment even if a kill lands mid-distribute —
         # a member that dies after assembly drains via the zero-claim exit
@@ -545,9 +585,20 @@ class ThreadedRuntime:
 
     def _try_ready(self, worker: int, victim: int) -> bool:
         with self._qlocks[victim]:
-            tao = self._ready[victim].popleft() if self._ready[victim] else None
-        if tao is None:
-            return False
+            dq = self._ready[victim]
+            if not dq:
+                return False
+            tao = dq[0]
+            # affinity gate on the steal path: leave a footprint TAO queued
+            # on its resident cluster for that cluster's (alive) workers —
+            # rescue steals off dead victims still pass and pay the move in
+            # _dpa_distribute.  Zero-footprint TAOs always pass (legacy
+            # schedules untouched); the worker's own deque is never gated.
+            if (worker != victim and victim not in self._dead_workers
+                    and self.core.locality.steal_gated(
+                        tao.footprint, worker, victim)):
+                return False
+            dq.popleft()
         self._dpa_distribute(tao, popper=worker)
         return True
 

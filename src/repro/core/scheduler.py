@@ -35,6 +35,7 @@ import threading
 
 from .admission import LoadSignals
 from .dag import TAO, TaoDag
+from .locality import LocalityTracker
 from .places import ClusterSpec
 from .policies import Placement, Policy
 from .ptt import PTTRegistry
@@ -100,6 +101,10 @@ class SchedulerCore:
         # fast_query=False keeps the PTT's O(n_workers) scan queries — only
         # useful as the baseline in perf/parity tests (mirrors fast_dispatch)
         self.ptt = PTTRegistry(spec, fast_query=fast_query)
+        # data-locality layer: per-cluster residency, movement table and the
+        # per-cluster penalty vectors policies charge for footprint TAOs.
+        # Zero-footprint TAOs never consult it (pinned-signature contract).
+        self.locality = LocalityTracker(spec)
         self._seed = seed
         self.rng = random.Random(seed)
         # one criticality multiset per DAG namespace: concurrent tenants must
@@ -321,6 +326,9 @@ class SchedulerCore:
             self._displaced_ns.clear()
             self._displaced_tenant.clear()
             self._tenant_of.clear()
+        # hit/miss/moved-bytes are per-run accounting; the measured movement
+        # table survives like the PTT (learned transfer rates are reusable)
+        self.locality.reset_counters()
 
     def reset_learning(self, seed: int | None = None) -> None:
         """Forget everything *learned* — PTT profiles (all impls), adaptive
@@ -331,6 +339,7 @@ class SchedulerCore:
         byte-identical to one on a freshly-built core."""
         self.ptt.reset()
         self.policy.reset()
+        self.locality.reset()
         self.reset_counters()
         with self._lock:
             self.rng = random.Random(self._seed if seed is None else seed)

@@ -40,7 +40,7 @@ import math
 import random
 from typing import Callable, Iterable, Sequence
 
-from .dag import TAO, TaoDag
+from .dag import TAO, DataFootprint, TaoDag
 from .places import BIG, LITTLE, ClusterSpec
 from .policies import Policy
 from .runtime import ChunkedWork, ThreadedRuntime
@@ -72,7 +72,8 @@ DECODE_UNIT = 64     # decode burst granularity (tokens per decode TAO)
 def append_request_chain(dag: TaoDag, r: ServeRequest, width_hint: int = 1,
                          bind: Callable[[TAO, ServeRequest], None]
                          | None = None,
-                         n_chunks: int = 1) -> TAO:
+                         n_chunks: int = 1,
+                         kv_bytes: float = 0.0) -> TAO:
     """Append ``prefill(r) -> decode_0(r) -> decode_1(r) -> ...`` to ``dag``
     and return the chain's sink (the request's last decode burst).
 
@@ -83,10 +84,19 @@ def append_request_chain(dag: TaoDag, r: ServeRequest, width_hint: int = 1,
     ``n_chunks > 1`` stamps the *prefill* TAO with that many chunk
     boundaries (``TAO.n_chunks``), making the compute-heavy phase
     preemptible at chunk granularity — decode bursts are already small.
+
+    ``kv_bytes > 0`` stamps the whole chain with ONE shared sticky
+    :class:`~repro.core.dag.DataFootprint` of that many bytes — the
+    request's KV cache.  Prefill materializes it on whatever cluster runs
+    it; every decode burst then pins to that cluster (a decode placed
+    elsewhere pays the modeled/measured cache move).  Zero keeps the chain
+    footprint-free, i.e. the exact legacy scheduling path.
     """
+    fp = DataFootprint(nbytes=kv_bytes, sticky=True) if kv_bytes > 0 else None
     pre = dag.add_task("prefill", width_hint=width_hint,
                        work=max(r.prompt_len / PREFILL_UNIT, 0.05))
     pre.n_chunks = max(1, n_chunks)
+    pre.footprint = fp
     if bind:
         bind(pre, r)
     prev = pre
@@ -96,6 +106,7 @@ def append_request_chain(dag: TaoDag, r: ServeRequest, width_hint: int = 1,
         t = dag.add_task("decode", width_hint=width_hint,
                          work=max(burst / DECODE_UNIT, 0.05),
                          deps=[prev])
+        t.footprint = fp
         if bind:
             bind(t, r)
         prev = t
@@ -120,7 +131,8 @@ def build_serving_dag(requests, width_hint: int = 1,
 def build_serving_workload(requests, width_hint: int = 1,
                            bind: Callable[[TAO, ServeRequest], None]
                            | None = None,
-                           n_chunks: int = 1):
+                           n_chunks: int = 1,
+                           kv_bytes_per_token: float = 0.0):
     """Request trace -> (``Workload``, ``dag_id -> ServeRequest`` map).
 
     One DAG per request, arriving at ``r.arrival`` under ``r.tenant`` and
@@ -128,13 +140,16 @@ def build_serving_workload(requests, width_hint: int = 1,
     ``bind`` is given it is wrapped as a lazy ``DagArrival.bind`` — payload
     closures materialize only for *admitted* requests, on the admitting
     thread, so a gate-rejected request never builds its jitted closures.
+    ``kv_bytes_per_token`` sizes each request's shared KV-cache footprint
+    as ``r.tokens * kv_bytes_per_token`` (0.0 = footprint-free legacy path).
     """
     wl = Workload()
     by_dag: dict[int, ServeRequest] = {}
     for r in requests:
         dag = TaoDag()
         append_request_chain(dag, r, width_hint=width_hint,
-                             n_chunks=n_chunks)
+                             n_chunks=n_chunks,
+                             kv_bytes=r.tokens * kv_bytes_per_token)
         lazy = None
         if bind is not None:
             def lazy(d: TaoDag, r=r) -> None:
@@ -282,15 +297,19 @@ def _stats_from(res: WorkloadResult, by_dag: dict, core) -> ServeStats:
 def simulate_serving(requests, spec: ClusterSpec, policy: Policy,
                      width_hint: int = 1, seed: int = 0,
                      admission=None, preemption=None,
-                     n_chunks: int = 1) -> ServeStats:
+                     n_chunks: int = 1,
+                     kv_bytes_per_token: float = 0.0) -> ServeStats:
     """Calibrated-model serving of a request trace on the simulator.
 
     ``admission`` / ``preemption`` are the same gate/controller objects the
     generic workload benches use; ``n_chunks`` makes prefill TAOs
-    preemptible at chunk granularity.
+    preemptible at chunk granularity.  ``kv_bytes_per_token > 0`` turns on
+    KV-cache affinity: decode bursts pin to the cluster that ran their
+    prefill and off-resident placements pay the modeled transfer time.
     """
     wl, by_dag = build_serving_workload(requests, width_hint=width_hint,
-                                        n_chunks=n_chunks)
+                                        n_chunks=n_chunks,
+                                        kv_bytes_per_token=kv_bytes_per_token)
     sim = Simulator(spec, policy, kernel_models=serving_kernel_models(),
                     seed=seed)
     res = sim.run_workload(wl, admission=admission, preemption=preemption)
@@ -301,7 +320,8 @@ def run_serving_workload_threaded(requests, spec: ClusterSpec, policy: Policy,
                                   binder: Callable[[TAO, ServeRequest], None],
                                   seed: int = 0, timeout_s: float = 300.0,
                                   admission=None, preemption=None,
-                                  runtime: ThreadedRuntime | None = None
+                                  runtime: ThreadedRuntime | None = None,
+                                  kv_bytes_per_token: float = 0.0
                                   ) -> ServeStats:
     """Real execution: the general entry point — ``binder(tao, r)`` attaches
     each TAO's ``ChunkedWork`` payload (jitted kernel calls; chunked prefill
@@ -312,8 +332,11 @@ def run_serving_workload_threaded(requests, spec: ClusterSpec, policy: Policy,
     consecutive traces; by default a fresh ``ThreadedRuntime`` is built.
     Returns the same ``ServeStats`` shape as :func:`simulate_serving`, with
     ``ptt_profiles`` holding *measured* per-(class, width) kernel times.
+    ``kv_bytes_per_token`` sizes KV-cache footprints exactly as on the
+    simulator — here a cache miss pays a *measured* host byte-copy.
     """
-    wl, by_dag = build_serving_workload(requests, bind=binder)
+    wl, by_dag = build_serving_workload(requests, bind=binder,
+                                        kv_bytes_per_token=kv_bytes_per_token)
     rt = runtime if runtime is not None else ThreadedRuntime(spec, policy,
                                                              seed=seed)
     res = rt.run_workload(wl, timeout_s=timeout_s, admission=admission,

@@ -527,6 +527,23 @@ class Simulator:
             # TAOs and continuations, so legacy schedules stay byte-identical)
             model = self._model_for(tao.type,
                                     self.core.rebind_impl(tao, leader))
+            # data-locality accounting: exactly one tracker.place per trace
+            # record (the conservation invariant replay_moved_bytes checks).
+            # A miss pays the modeled transfer delay below and feeds the
+            # movement table; zero-footprint TAOs skip all of it.
+            fp = tao.footprint
+            move_cost = 0.0
+            if fp is not None:
+                loc = self.core.locality
+                fp_src = fp.resident
+                fp_hit, fp_moved, move_cost = loc.place(tao.type, fp, leader)
+                if not fp_hit:
+                    loc.record_transfer(tao.type, fp_src,
+                                        loc.cluster_of(leader), fp_moved,
+                                        move_cost)
+                st_fp = stats.get(tao.dag_id)
+                if st_fp is not None:
+                    st_fp.record_locality(fp_hit, fp_moved)
             members = [m for m in place_members(leader, width)
                        if m < n_workers and m not in self.failed]
             if not members:
@@ -599,6 +616,10 @@ class Simulator:
                 t_end = t0 + work / max(
                     model.speed[cluster_of(popper)] *
                     max(self.speed_mult[popper], 1e-6), 1e-9)
+            if move_cost:
+                # off-resident placement: the cross-cluster transfer is
+                # serialized before compute, delaying this segment's finish
+                t_end += move_cost
 
             for m in chosen:
                 busy_acc += t_end - joins[m]
@@ -637,6 +658,17 @@ class Simulator:
             # overtaken by a PREEMPT is recognizably stale
             heapq.heappush(events, (t_end, next(seq), COMPLETE, (tao, rec)))
 
+        def steal_ok(v: int, worker: int) -> bool:
+            """Affinity gate on the steal path: decline a cross-cluster
+            steal of a footprint TAO queued on its resident cluster —
+            UNLESS the victim is dead (rescue-stealing off a dead cluster
+            pays the move instead of stranding the TAO).  Zero-footprint
+            TAOs always pass, so legacy schedules are untouched."""
+            if v in self.failed:
+                return True
+            return not self.core.locality.steal_gated(
+                queues[v][0].footprint, worker, v)
+
         def dispatch_from(worker: int, t0: float) -> bool:
             """Worker tries local pop then one random steal (paper §5)."""
             if worker in self.failed:
@@ -647,12 +679,16 @@ class Simulator:
             if fast:
                 if nonempty:
                     v = nonempty.choice(self.rng)
+                    if not steal_ok(v, worker):
+                        return False
                     start_tao(pop_queue(v), worker, t0)
                     return True
                 return False
             victims = [v for v in range(n_workers) if queues[v]]
             if victims:
                 v = self.rng.choice(victims)
+                if not steal_ok(v, worker):
+                    return False
                 start_tao(pop_queue(v), worker, t0)
                 return True
             return False
@@ -750,7 +786,8 @@ class Simulator:
                     else self.rng.choice(sorted(idle))
                 if free_time[w] <= t0 + 1e-12:
                     idle.discard(w)
-                    dispatch_from(w, t0)
+                    if not dispatch_from(w, t0):
+                        idle.add(w)     # affinity-gated steal: stay idle
             # preemption consult point 1: the TAO stayed queued (start_tao
             # would have stamped assigned_leader) and may displace running
             # work at the controller's discretion; it is the beneficiary of

@@ -187,6 +187,13 @@ class DagStats:
     # application work units (serving: prompt+gen tokens) carried by the
     # arrival; aggregated per tenant by WorkloadResult.tokens_by_tenant
     tokens: float = 0.0
+    # data-locality accounting (repro.core.locality): dispatches of this
+    # DAG's footprint TAOs that landed on (hits) / off (misses) the data's
+    # resident cluster, and the bytes those misses moved.  Zero-footprint
+    # DAGs never touch these.
+    locality_hits: int = 0
+    locality_misses: int = 0
+    moved_bytes: float = 0.0
 
     @classmethod
     def for_arrival(cls, dag_id: int, name: str, arrival: float,
@@ -225,6 +232,17 @@ class DagStats:
         and its continuation is being re-admitted (claimed chunks are kept;
         only unclaimed chunks are redone)."""
         self.requeued_by_failure += 1
+
+    def record_locality(self, hit: bool, moved_bytes: float = 0.0) -> None:
+        """One dispatch of this DAG's footprint TAOs was accounted by the
+        locality tracker: a hit ran on the data's resident cluster, a miss
+        moved ``moved_bytes`` across clusters (both vehicles call this at
+        the moment the TAO is actually distributed to workers)."""
+        if hit:
+            self.locality_hits += 1
+        else:
+            self.locality_misses += 1
+            self.moved_bytes += moved_bytes
 
     def record_completion(self, t: float) -> None:
         """One TAO of this DAG committed at time ``t``; the last one stamps
@@ -420,6 +438,30 @@ class WorkloadResult(SimResult):
             return {t: 0.0 for t in self.per_tenant()}
         return {t: toks / self.makespan
                 for t, toks in self.tokens_by_tenant().items()}
+
+    # -- data-locality accounting -------------------------------------------
+    # Hits/misses/moved-bytes are stamped per dispatch by the vehicles via
+    # DagStats.record_locality; zero-footprint workloads report 0/0/0.0.
+    def locality_hits(self) -> int:
+        return sum(s.locality_hits for s in self.per_dag.values())
+
+    def locality_misses(self) -> int:
+        return sum(s.locality_misses for s in self.per_dag.values())
+
+    def moved_bytes(self) -> float:
+        """Total bytes moved across clusters by off-resident placements."""
+        return sum(s.moved_bytes for s in self.per_dag.values())
+
+    def cache_hit_rate(self) -> float:
+        """Fraction of footprint-TAO dispatches that ran on the resident
+        cluster (nan when the workload carried no footprints)."""
+        hits, misses = self.locality_hits(), self.locality_misses()
+        total = hits + misses
+        return hits / total if total else float("nan")
+
+    def moved_bytes_by_tenant(self) -> dict:
+        return {tenant: sum(s.moved_bytes for s in stats)
+                for tenant, stats in self.per_tenant().items()}
 
     def sojourn_p50(self) -> float:
         return percentile(self.sojourns(), 50)

@@ -157,6 +157,17 @@ class ZooTenant:
     def prefill_chunks(self, r: ServeRequest) -> int:
         return max(1, math.ceil(r.prompt_len / self.slab_tokens))
 
+    def kv_bytes_per_token(self) -> float:
+        """Per-token KV-cache bytes this tenant's decode actually streams.
+
+        Sized from the kernel flavor's decode slab (``4*S x H*D`` float32
+        standing for ``slab_tokens`` tokens of cache), so threaded-bench
+        footprints track the bytes the payload really touches — model
+        flavors share the same figure for comparable footprints."""
+        H, S, D = 4, 256, 64
+        slab_bytes = (4 * S) * (H * D) * 4
+        return slab_bytes / float(self.slab_tokens)
+
     def bind(self, tao: TAO, r: ServeRequest) -> None:
         """Attach this tenant's ChunkedWork payload to one serving TAO.
 

@@ -154,3 +154,18 @@ def pad_to_multiple(n: int, multiple: int) -> int:
     """Round up (used for vocab padding so TP divides: paper-of-record
     practice for odd vocab sizes like 92553)."""
     return int(math.ceil(n / multiple) * multiple)
+
+
+def operand_footprint(nbytes: float, shard_index: int, n_clusters: int,
+                      sticky: bool = False):
+    """Training-side :class:`~repro.core.dag.DataFootprint` for a shard-local
+    operand: shard ``i`` of an FSDP/TP layout lives on cluster
+    ``i % n_clusters`` (``home``, so residency survives
+    ``reset_execution_state``).  ``sticky=False`` by default — optimizer
+    re-sharding may migrate an operand, unlike a serving KV cache."""
+    from ..core.dag import DataFootprint
+
+    if n_clusters <= 0:
+        raise ValueError(f"n_clusters must be positive, got {n_clusters}")
+    return DataFootprint(nbytes=nbytes, sticky=sticky,
+                         home=shard_index % n_clusters)

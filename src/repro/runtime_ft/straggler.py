@@ -50,16 +50,25 @@ class StragglerDetector:
         models.  The PTT stores a separate EWMA block per implementation
         variant (per-(class, impl) speeds differ, so a group slow on one
         impl may be healthy on another): each recorded impl is compared
-        against its own cross-fleet median and reported per-impl."""
+        against its own cross-fleet median and reported per-impl.
+
+        Workers under the PTT's dead mask (``PTT.excluded`` — chaos kills)
+        are skipped entirely: a corpse is neither reportable as a straggler
+        (the fleet manager already routed around it) nor admissible into
+        the median/MAD baseline, where its stale pre-kill EWMA would skew
+        the threshold the *live* workers are judged against."""
         reports: list[StragglerReport] = []
         for tao_type in self.ptt.types():
             table = self.ptt.table(tao_type)
             spec = table.spec
+            dead = table.excluded
             widths = spec.widths if width is None else (width,)
             for impl in table.impls():
                 for v in widths:
                     times, workers = [], []
                     for w in range(spec.n_workers):
+                        if w in dead:
+                            continue
                         if table.samples(w, v, impl) >= self.min_samples:
                             times.append(table.time(w, v, impl))
                             workers.append(w)
@@ -79,6 +88,8 @@ class StragglerDetector:
         return reports
 
     def healthy_workers(self, width: int | None = 1) -> set[int]:
+        """Live workers not currently flagged: excluded (dead-masked)
+        workers are removed alongside the stragglers."""
         spec = self.ptt.spec
         bad = {r.worker for r in self.scan(width)}
-        return set(range(spec.n_workers)) - bad
+        return set(range(spec.n_workers)) - bad - set(self.ptt.excluded)

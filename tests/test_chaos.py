@@ -278,6 +278,39 @@ def test_straggler_scan_all_widths_and_impls():
     assert det.healthy_workers(width=None) == set(range(16)) - {5}
 
 
+def test_straggler_scan_skips_excluded_workers():
+    """Dead-masked workers are neither reported as stragglers nor admitted
+    into the median/MAD baseline the live workers are judged against."""
+    from repro.core.ptt import PTTRegistry
+    from repro.runtime_ft.straggler import StragglerDetector
+
+    spec = fleet(16, 0)
+    reg = PTTRegistry(spec)
+    t = reg.table("matmul")
+    for w in range(16):
+        for _ in range(4):
+            # worker 5: genuine straggler.  workers 8-15: pre-kill EWMAs so
+            # slow that counting the corpses shifts the cross-fleet median
+            # from 1.0 to 40.0 and hides worker 5 under it.
+            t.record(w, 1, 40.0 if w == 5 else (80.0 if w >= 8 else 1.0))
+    dead = frozenset(range(8, 16))
+    det = StragglerDetector(reg)
+    # without the mask the corpse EWMAs drag the cross-fleet median up to
+    # 60.0: nothing clears 2x median, so the genuine straggler is hidden
+    assert det.scan(width=1) == []
+    assert det.healthy_workers(width=1) == set(range(16))
+    # masked scan: corpses out of the baseline (median back to 1.0), the
+    # straggler flagged, and none of the dead workers ever reported
+    reg.set_excluded(dead)
+    reports = det.scan(width=1)
+    assert {r.worker for r in reports} == {5}
+    assert det.healthy_workers(width=1) == set(range(8)) - {5}
+    # the straggler itself dying must silence its report too
+    reg.set_excluded(dead | {5})
+    assert det.scan(width=1) == []
+    assert det.healthy_workers(width=1) == set(range(8)) - {5}
+
+
 def test_elastic_cluster_spec_preserves_base_classes():
     from repro.core import BIG, LITTLE
     from repro.runtime_ft.elastic import ElasticFleet
