@@ -1,4 +1,4 @@
-"""Scheduler hot-path microbenchmarks -> ``BENCH_sched.json``.
+"""Scheduler hot-path microbenchmarks -> ``benchmarks/BENCH_sched.json``.
 
 The paper's pitch is *low-overhead* online scheduling, so the scheduler's
 own cost is a first-class metric.  This suite times every per-TAO operation
@@ -9,31 +9,54 @@ incremental fast paths (default) and the O(n_workers)-scan baselines
 (``fast_query=False`` / ``fast_dispatch=False``), and then runs the
 end-to-end multi-DAG stream on both.
 
-Two outputs:
+The sharded-scheduler section (``--shards`` / the full-mode scaling sweep)
+adds three gates and one sweep on top:
 
-* a **correctness gate** — the fast and slow paths must schedule
-  *byte-identically* (same trace for the same seed).  The exit status is
-  non-zero iff that check fails; wall-clock is never asserted (CI runners
-  are noisy).
-* ``BENCH_sched.json`` — the measured numbers, committed so future PRs have
-  a perf trajectory to compare against.
+* **pin gate** (shards=1): every pinned trace signature recomputed through
+  the ``ShardedScheduler`` path must match byte for byte;
+* **conservation gate** (shards>1): no TAO lost or duplicated across
+  inter-shard work exchanges (``exchange_conserved``), and every admitted
+  TAO completes;
+* **threaded smoke**: the same guarantees on real worker threads;
+* **scaling sweep** (full mode): 1k/10k/100k-worker fleets at shard counts
+  {1, 4, 16}, simulator vehicle, recording admit+place throughput and
+  end-to-end scheduling throughput vs the single-lock ``SchedulerCore``
+  (the 100k point runs under the vectorized event loop).
+
+Exit status is non-zero iff a determinism/conservation gate fails;
+wall-clock is never asserted (CI runners are noisy).  The measured numbers
+land in ``BENCH_sched.json``, committed so future PRs have a perf
+trajectory to compare against.
 
 Usage::
 
     PYTHONPATH=src python benchmarks/perf.py            # full, all sizes
     PYTHONPATH=src python benchmarks/perf.py --quick    # CI smoke (small)
+    PYTHONPATH=src python benchmarks/perf.py --quick --shards 4
     PYTHONPATH=src python benchmarks/perf.py --out /tmp/bench.json
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import platform
 import sys
 import time
 
 FULL_SIZES = (64, 256, 1000)
 QUICK_SIZES = (64, 256)
+
+# the sharding scaling sweep: (n_workers, stream, vectorized-only?) — the
+# 100k point is vectorized (the scalar water-fill walks ~10k-member places
+# per TAO there; completing under the numpy event loop is the acceptance
+# criterion for the vectorized path)
+SCALE_POINTS = (
+    (1_000, dict(n_dags=10, n_tasks=200), False),
+    (10_000, dict(n_dags=10, n_tasks=200), False),
+    (100_000, dict(n_dags=4, n_tasks=150), True),
+)
+SCALE_SHARDS = (1, 4, 16)
 
 
 def timed_us(fn, min_time: float = 0.05, max_number: int = 200_000) -> float:
@@ -190,22 +213,206 @@ def bench_end_to_end(spec, n_dags: int, n_tasks: int, seed: int = 1) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Sharded scheduler: pin gate, conservation gate, scaling sweep, threaded
+# ---------------------------------------------------------------------------
+def shard_pin_gate() -> dict:
+    """Every pinned signature recomputed through ShardedScheduler(n=1).
+
+    Byte-identity through the sharded path is the tentpole correctness
+    bar: one shard must reproduce the single-core scheduler exactly —
+    same RNG stream, same PTT view, same placements.  Deterministic, so
+    a failure here is a refactor bug, never a timing flake."""
+    from repro.core.identity import PINNED_SIGNATURES, check_pins
+
+    violations = check_pins(n_shards=1)
+    for v in violations:
+        print(f"# SHARD BYTE-IDENTITY VIOLATION: {v}", flush=True)
+    n_pins = len(PINNED_SIGNATURES)
+    emit("shard.identity.pins", 0.0,
+         f"{len(violations)} violations / {n_pins} pins at n_shards=1")
+    return {"pinned": n_pins, "violations": violations}
+
+
+def _shard_stream(n_workers: int, n_dags: int, n_tasks: int, **sim_kwargs):
+    """One multi-DAG stream on the simulator -> (elapsed_s, result, total)."""
+    from repro.core import Simulator, make_policy, random_workload
+
+    wl = random_workload(n_dags=n_dags, rate=50.0, n_tasks=n_tasks, seed=0)
+    total = wl.total_taos()
+    sim = Simulator(make_spec(n_workers), make_policy("molding:adaptive"),
+                    seed=1, **sim_kwargs)
+    t0 = time.perf_counter()
+    res = sim.run_workload(wl)
+    return time.perf_counter() - t0, res, total
+
+
+def shard_conservation_gate(n_shards: int, quick: bool) -> dict:
+    """Work-exchange conservation on the simulator vehicle.
+
+    Every admitted TAO completes exactly once and the per-shard exchange
+    in/out counters balance — a violation means a TAO was lost or
+    duplicated crossing shards, which is a scheduler bug, never timing."""
+    n_workers = 256 if quick else 1_000
+    dt, res, total = _shard_stream(n_workers, n_dags=8, n_tasks=80,
+                                   n_shards=n_shards)
+    ex = res.exchanges or {}
+    conserved = (res.completed == total
+                 and sum(ex.get("in", [])) == ex.get("total", -1)
+                 and sum(ex.get("out", [])) == ex.get("total", -1))
+    emit(f"shard.conservation.s{n_shards}", dt / max(total, 1) * 1e6,
+         f"completed={res.completed}/{total};"
+         f"exchanges={ex.get('total', 0)};conserved={conserved}")
+    if not conserved:
+        print(f"# EXCHANGE CONSERVATION VIOLATION: completed="
+              f"{res.completed}/{total} exchanges={ex}", file=sys.stderr,
+              flush=True)
+    return {"n_workers": n_workers, "completed": res.completed,
+            "total": total, "exchanges": ex, "conserved": conserved}
+
+
+def bench_admit_place(spec, core) -> float:
+    """us per admit+record+commit driving the scheduler object directly
+    (no event loop): the pure scheduling-throughput metric."""
+    from repro.core import TaoDag, chain
+
+    n = 400
+    d = TaoDag()
+    chain(d, "sort", n, width_hint=1)
+    t0 = time.perf_counter()
+    ready = list(core.prepare(d))
+    i = 0
+    while ready:
+        t = ready.pop()
+        p = core.admit(t, 0)
+        core.record_time(t, p.target, p.width, 1.0 + 0.01 * (i % 13))
+        i += 1
+        ready.extend(core.commit_and_wakeup(t))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def shard_scaling_sweep() -> dict:
+    """1k/10k/100k workers x shards {1, 4, 16}: end-to-end scheduling
+    throughput vs the single-lock SchedulerCore baseline, plus the direct
+    admit+place drive.  The 100k point runs every leg under the vectorized
+    event loop (scalar water-filling walks ~10k-member places there)."""
+    from repro.core import SchedulerCore, ShardedScheduler, make_policy
+
+    out: dict = {}
+    for n_workers, stream, vec_only in SCALE_POINTS:
+        spec = make_spec(n_workers)
+        row: dict = {"stream": dict(stream), "vectorized": vec_only,
+                     "configs": {}}
+        base_kw = {"vectorized": True} if vec_only else {}
+        dt_base, res, total = _shard_stream(n_workers, **stream, **base_kw)
+        thr_base = total / dt_base
+        row["configs"]["single-lock"] = {
+            "elapsed_s": round(dt_base, 4),
+            "taos_per_s": round(thr_base, 1),
+            "completed": res.completed,
+            "admit_place_us": round(bench_admit_place(
+                spec, SchedulerCore(spec, make_policy("molding:adaptive"),
+                                    seed=0)), 2),
+        }
+        emit(f"shard.scale.{n_workers}w.single-lock",
+             dt_base / max(total, 1) * 1e6, f"taos/s={thr_base:.0f}")
+        for k in SCALE_SHARDS:
+            dt, res, total = _shard_stream(n_workers, **stream,
+                                           n_shards=k, **base_kw)
+            thr = total / dt
+            ex = res.exchanges or {}
+            cfg = {
+                "elapsed_s": round(dt, 4),
+                "taos_per_s": round(thr, 1),
+                "completed": res.completed,
+                "speedup_vs_single_lock": round(dt_base / dt, 2),
+                "exchanges": ex.get("total", 0),
+                "admit_place_us": round(bench_admit_place(
+                    spec, ShardedScheduler(
+                        spec, make_policy("molding:adaptive"),
+                        n_shards=k, seed=0)), 2),
+            }
+            row["configs"][f"shards-{k}"] = cfg
+            emit(f"shard.scale.{n_workers}w.shards{k}",
+                 dt / max(total, 1) * 1e6,
+                 f"taos/s={thr:.0f};speedup={cfg['speedup_vs_single_lock']}x;"
+                 f"exchanges={cfg['exchanges']}")
+        # the vectorized leg at the largest scalar size, for the trajectory
+        if not vec_only:
+            dt, res, total = _shard_stream(n_workers, **stream,
+                                           n_shards=max(SCALE_SHARDS),
+                                           vectorized=True)
+            row["configs"][f"shards-{max(SCALE_SHARDS)}-vec"] = {
+                "elapsed_s": round(dt, 4),
+                "taos_per_s": round(total / dt, 1),
+                "completed": res.completed,
+                "speedup_vs_single_lock": round(dt_base / dt, 2),
+            }
+            emit(f"shard.scale.{n_workers}w.shards{max(SCALE_SHARDS)}vec",
+                 dt / max(total, 1) * 1e6,
+                 f"taos/s={total / dt:.0f};speedup={dt_base / dt:.2f}x")
+        out[str(n_workers)] = row
+    return out
+
+
+def shard_threaded_smoke(n_shards: int) -> dict:
+    """Multi-shard run on real worker threads: completion + conservation.
+
+    Payloads are tiny GIL-releasing sleeps; the assertions are
+    timing-free (every admitted TAO commits, exchange counters balance)."""
+    import time as _time
+
+    from repro.core import (ChunkedWork, ThreadedRuntime, fleet, make_policy,
+                            random_workload)
+
+    wl = random_workload(n_dags=6, rate=30.0, n_tasks=24, seed=5)
+    for arr in wl.arrivals():
+        for node in arr.dag.nodes:
+            node.work = ChunkedWork(lambda i: _time.sleep(0.0002), 2)
+    total = wl.total_taos()
+    rt = ThreadedRuntime(fleet(8, 4), make_policy("molding:adaptive"),
+                         seed=3, n_shards=n_shards)
+    t0 = time.perf_counter()
+    res = rt.run_workload(wl, timeout_s=120.0)
+    dt = time.perf_counter() - t0
+    conserved = res.completed == total and rt.core.exchange_conserved()
+    ex = res.exchanges or {}
+    emit(f"shard.threaded.s{n_shards}", dt / max(total, 1) * 1e6,
+         f"completed={res.completed}/{total};"
+         f"exchanges={ex.get('total', 0)};conserved={conserved}")
+    if not conserved:
+        print(f"# THREADED EXCHANGE CONSERVATION VIOLATION: "
+              f"completed={res.completed}/{total} exchanges={ex}",
+              file=sys.stderr, flush=True)
+    return {"completed": res.completed, "total": total,
+            "exchanges": ex, "conserved": conserved}
+
+
+# ---------------------------------------------------------------------------
 def main() -> int:
     args = sys.argv[1:]
     quick = "--quick" in args
-    out_path = "BENCH_sched.json"
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_sched.json")
     if "--out" in args:
         i = args.index("--out") + 1
         if i >= len(args) or args[i].startswith("--"):
             sys.exit("--out needs a file path (e.g. --out BENCH_sched.json)")
         out_path = args[i]
+    shards: int | None = None
+    if "--shards" in args:
+        i = args.index("--shards") + 1
+        if i >= len(args) or args[i].startswith("--"):
+            sys.exit("--shards needs a count (e.g. --shards 4)")
+        shards = int(args[i])
+        if shards < 1:
+            sys.exit("--shards must be >= 1")
     sizes = QUICK_SIZES if quick else FULL_SIZES
     # stream sized so the slow baseline stays seconds, not minutes
     n_dags, n_tasks = (6, 60) if quick else (8, 150)
 
     print("name,us_per_call,derived")
     report = {
-        "schema": "bench_sched/v1",
+        "schema": "bench_sched/v2",
         "quick": quick,
         "python": platform.python_version(),
         "platform": platform.platform(),
@@ -214,33 +421,60 @@ def main() -> int:
         "sizes": {},
     }
     ok = True
-    for n in sizes:
-        spec = make_spec(n)
-        micro = {}
-        micro.update(bench_ptt(spec))
-        micro.update(bench_core(spec, fast_query=True))
-        micro.update(bench_core(spec, fast_query=False))
-        micro.update(bench_interference(spec))
-        for k, v in sorted(micro.items()):
-            emit(f"perf.{n}w.{k}", v)
-        e2e = bench_end_to_end(spec, n_dags, n_tasks)
-        ok = ok and e2e["trace_equal"]
-        emit(f"perf.{n}w.end_to_end", e2e["fast_s"] * 1e6,
-             f"slow={e2e['slow_s']}s;speedup={e2e['speedup']}x;"
-             f"trace_equal={e2e['trace_equal']}")
-        report["sizes"][str(n)] = {
-            "n_workers": n,
-            "micro_us": {k: round(v, 3) for k, v in micro.items()},
-            "end_to_end": e2e,
+    if shards is not None:
+        # focused CI-smoke mode: just the sharded gates at this count
+        report["sharding"] = {"n_shards": shards}
+        if shards == 1:
+            pins = shard_pin_gate()
+            report["sharding"]["pin_gate"] = pins
+            ok = ok and not pins["violations"]
+        else:
+            cons = shard_conservation_gate(shards, quick)
+            thr = shard_threaded_smoke(shards)
+            report["sharding"]["conservation_gate"] = cons
+            report["sharding"]["threaded_smoke"] = thr
+            ok = ok and cons["conserved"] and thr["conserved"]
+    else:
+        for n in sizes:
+            spec = make_spec(n)
+            micro = {}
+            micro.update(bench_ptt(spec))
+            micro.update(bench_core(spec, fast_query=True))
+            micro.update(bench_core(spec, fast_query=False))
+            micro.update(bench_interference(spec))
+            for k, v in sorted(micro.items()):
+                emit(f"perf.{n}w.{k}", v)
+            e2e = bench_end_to_end(spec, n_dags, n_tasks)
+            ok = ok and e2e["trace_equal"]
+            emit(f"perf.{n}w.end_to_end", e2e["fast_s"] * 1e6,
+                 f"slow={e2e['slow_s']}s;speedup={e2e['speedup']}x;"
+                 f"trace_equal={e2e['trace_equal']}")
+            report["sizes"][str(n)] = {
+                "n_workers": n,
+                "micro_us": {k: round(v, 3) for k, v in micro.items()},
+                "end_to_end": e2e,
+            }
+        pins = shard_pin_gate()
+        cons = shard_conservation_gate(4, quick)
+        thr = shard_threaded_smoke(4)
+        report["sharding"] = {
+            "pin_gate": pins,
+            "conservation_gate": cons,
+            "threaded_smoke": thr,
         }
+        ok = ok and not pins["violations"]
+        ok = ok and cons["conserved"] and thr["conserved"]
+        if not quick:
+            report["sharding"]["scaling"] = shard_scaling_sweep()
 
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {out_path}", flush=True)
     if not ok:
-        print("# FAIL: fast/slow paths produced different traces",
-              file=sys.stderr, flush=True)
+        print("# FAIL: determinism or conservation gate violated "
+              "(fast/slow trace mismatch, pin drift, or a lost/duplicated "
+              "TAO in a work exchange)", file=sys.stderr, flush=True)
         return 1
     return 0
 

@@ -1,13 +1,24 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dry-run JSON artifacts.
+dry-run JSON artifacts, and (with ``--benches``) aggregate every committed
+``benchmarks/BENCH_*.json`` into one perf-trajectory table.
 
-Usage: PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+    PYTHONPATH=src python -m benchmarks.report --benches
+    PYTHONPATH=src python -m benchmarks.report --benches --filter speedup
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import re
+
+# the default trajectory view: headline outcomes, not every micro number —
+# pass --filter '' (empty regex matches everything) for the full dump
+BENCH_HIGHLIGHTS = (r"speedup|taos_per_s|attainment|p99|makespan|conserved"
+                    r"|violations|exchanges|completed")
 
 PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip (v5e-class, per the brief)
 HBM_BW = 819e9           # B/s per chip
@@ -79,11 +90,67 @@ def roofline_row(rec: dict) -> dict:
     }
 
 
+def flatten_leaves(obj, prefix: str = "") -> list[tuple[str, object]]:
+    """Depth-first flatten of a JSON tree to ``(dotted.path, scalar)`` pairs.
+
+    Only numeric/bool leaves are kept — strings (platform tags, notes)
+    are metadata, not trajectory metrics."""
+    out: list[tuple[str, object]] = []
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            out.extend(flatten_leaves(obj[k], f"{prefix}.{k}" if prefix else k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.extend(flatten_leaves(v, f"{prefix}[{i}]"))
+    elif isinstance(obj, bool) or isinstance(obj, (int, float)):
+        out.append((prefix, obj))
+    return out
+
+
+def bench_table(bench_dir: pathlib.Path, pattern: str) -> None:
+    """One trajectory table over every ``BENCH_*.json`` in ``bench_dir``."""
+    rx = re.compile(pattern, re.IGNORECASE)
+    files = sorted(bench_dir.glob("BENCH_*.json"))
+    if not files:
+        print(f"no BENCH_*.json under {bench_dir}")
+        return
+    print(f"### Bench trajectory — {len(files)} suites "
+          f"(filter: `{pattern or 'all'}`)")
+    print()
+    print("| suite | metric | value |")
+    print("|---|---|---|")
+    for p in files:
+        suite = p.stem.replace("BENCH_", "")
+        try:
+            data = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"| {suite} | UNREADABLE | {e} |")
+            continue
+        rows = [(k, v) for k, v in flatten_leaves(data) if rx.search(k)]
+        for k, v in rows:
+            if isinstance(v, bool):
+                val = str(v).lower()
+            elif isinstance(v, float):
+                val = f"{v:.4g}"
+            else:
+                val = str(v)
+            print(f"| {suite} | {k} | {val} |")
+        if not rows:
+            print(f"| {suite} | (no metric matches filter) | – |")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--benches", action="store_true",
+                    help="aggregate benchmarks/BENCH_*.json into one table")
+    ap.add_argument("--filter", default=BENCH_HIGHLIGHTS,
+                    help="regex over dotted metric paths ('' = everything)")
     args = ap.parse_args()
+    if args.benches:
+        bench_table(pathlib.Path(__file__).resolve().parent, args.filter)
+        return
     d = pathlib.Path(args.dir) / args.mesh
     cells = load_cells(d)
 

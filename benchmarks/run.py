@@ -153,7 +153,8 @@ def tables_molding(n_tasks: int = 3000) -> None:
 # beyond-paper: concurrent multi-DAG workload stream (online arrivals)
 # ---------------------------------------------------------------------------
 def multi_dag_bench(n_dags: int = 16, n_tasks: int = 150,
-                    rate: float = 4.0, vehicle: str = "sim") -> None:
+                    rate: float = 4.0, vehicle: str = "sim",
+                    shards: int | None = None) -> None:
     """Rank every policy on an online-arrival stream.
 
     ``n_dags`` mixed-degree random DAGs arrive as a Poisson process; the
@@ -165,6 +166,9 @@ def multi_dag_bench(n_dags: int = 16, n_tasks: int = 150,
     Workload abstraction* on real worker threads (hikey960-shaped 8-thread
     pool, scaled-down stream so arrivals are real wall-clock sleeps) —
     making the two execution vehicles directly comparable on one stream.
+    ``shards`` (``--shards N``) routes both vehicles through the
+    :class:`ShardedScheduler`; the derived column then also reports the
+    inter-shard work-exchange count.
     """
     from repro.core import (ALL_POLICY_NAMES, Simulator, ThreadedRuntime,
                             fleet, hikey960, make_policy, random_workload)
@@ -176,22 +180,28 @@ def multi_dag_bench(n_dags: int = 16, n_tasks: int = 150,
         n_dags, n_tasks, rate = min(n_dags, 6), min(n_tasks, 40), 40.0
     else:
         spec, tag = fleet(48, 16), "fleet64"   # 48 big + 16 LITTLE groups
+    if shards is not None:
+        tag = f"{tag}.s{shards}"
     ranking = []
     for policy in ALL_POLICY_NAMES:
         wl = random_workload(n_dags=n_dags, rate=rate, n_tasks=n_tasks,
                              seed=0)
         if vehicle == "threaded":
-            rt = ThreadedRuntime(spec, make_policy(policy), seed=1)
+            rt = ThreadedRuntime(spec, make_policy(policy), seed=1,
+                                 n_shards=shards)
             res = rt.run_workload(wl, timeout_s=120.0)
         else:
-            sim = Simulator(spec, make_policy(policy), seed=1)
+            sim = Simulator(spec, make_policy(policy), seed=1,
+                            n_shards=shards)
             res = sim.run_workload(wl)
         assert res.completed == wl.total_taos()
         p50, p99 = res.sojourn_p50(), res.sojourn_p99()
+        ex = ";exchanges=%d" % (res.exchanges or {}).get("total", 0) \
+            if shards is not None else ""
         emit(f"multidag.{tag}.{policy}",
              res.mean_sojourn() * 1e6,
              f"p50={p50:.4f}s;p99={p99:.4f}s;"
-             f"makespan={res.makespan:.4f}s;util={res.utilization:.3f}")
+             f"makespan={res.makespan:.4f}s;util={res.utilization:.3f}{ex}")
         ranking.append((p50, p99, policy))
     for i, (p50, p99, policy) in enumerate(sorted(ranking), 1):
         print(f"# multidag rank {i}: {policy} "
@@ -1144,6 +1154,8 @@ def main() -> None:
     # (`run.py --workload multi-dag` is the documented stream-bench entry);
     # all selected sections run, unknown names abort with the valid list.
     # `--vehicle {sim,threaded}` picks the multi-dag execution vehicle;
+    # `--shards N` routes the multi-dag stream through the sharded
+    # scheduler (both vehicles);
     # `--admission {none,token-bucket,slo-adaptive}` replaces the multi-dag
     # policy sweep with the bursty-tenant admission A/B bench;
     # `--preemption {none,backlog,critical-boost}` composes with it and
@@ -1156,6 +1168,7 @@ def main() -> None:
     vehicle_set = False       # serve defaults to both vehicles unless set
     admission = "none"
     preemption = "none"
+    shards: int | None = None
     out = None                # --out: serve report path override
     i = 0
     while i < len(args):
@@ -1198,6 +1211,13 @@ def main() -> None:
             preemption = args[i]
         elif args[i].startswith("--preemption="):
             preemption = args[i].split("=", 1)[1]
+        elif args[i] == "--shards":
+            i += 1
+            if i >= len(args):
+                sys.exit("--shards needs a count (e.g. --shards 4)")
+            shards = int(args[i])
+        elif args[i].startswith("--shards="):
+            shards = int(args[i].split("=", 1)[1])
         else:
             selected.append(args[i])
         i += 1
@@ -1210,6 +1230,8 @@ def main() -> None:
     if preemption not in ALL_PREEMPTION_NAMES:
         sys.exit(f"unknown preemption controller: {preemption} "
                  f"(choose from: {', '.join(ALL_PREEMPTION_NAMES)})")
+    if shards is not None and shards < 1:
+        sys.exit("--shards must be >= 1")
     unknown = [s for s in selected if s not in SECTIONS]
     if unknown:
         sys.exit(f"unknown section(s): {', '.join(unknown)} "
@@ -1233,7 +1255,7 @@ def main() -> None:
             preemption_bench(vehicle=vehicle, gate=admission,
                              controller=preemption)
         elif admission == "none":
-            multi_dag_bench(vehicle=vehicle)
+            multi_dag_bench(vehicle=vehicle, shards=shards)
         else:
             admission_bench(vehicle=vehicle, gate=admission)
     if sel("serve"):

@@ -12,8 +12,9 @@ from .dag_gen import (KERNEL_TYPES, bursty_workload, paper_dags, random_dag,
 from .identity import trace_signature
 from .locality import LocalityTracker, replay_moved_bytes
 from .places import (BIG, LITTLE, ClusterSpec, fleet, hikey960, homogeneous,
-                     leader_of, place_members, valid_widths)
-from .policies import (ALL_POLICY_NAMES, AdaptivePolicy,
+                     leader_of, partition_workers, place_members,
+                     valid_widths)
+from .policies import (ALL_POLICY_NAMES, EXCHANGE_THRESHOLD, AdaptivePolicy,
                        CriticalityAwarePolicy, CriticalityPTTPolicy,
                        HomogeneousPolicy, MoldingPolicy, Placement, Policy,
                        WeightBasedPolicy, make_policy)
@@ -24,6 +25,7 @@ from .preemption import (ALL_PREEMPTION_NAMES, BacklogPreemption, ChunkCursor,
 from .ptt import PTT, PTTRegistry
 from .runtime import ChunkedWork, ThreadedRuntime
 from .scheduler import SchedulerCore
+from .shard import ShardedScheduler, ShardMap
 from .simulator import (KernelModel, SimResult, Simulator,
                         paper_kernel_models, run_policy)
 from .workload import (DagArrival, DagStats, Workload, WorkloadResult,
@@ -38,7 +40,8 @@ __all__ = [
     "AdmissionRequest", "LoadSignals", "NoAdmission", "SloAdaptiveGate",
     "TokenBucketGate", "make_gate",
     "BIG", "LITTLE", "ClusterSpec", "fleet", "hikey960", "homogeneous",
-    "leader_of", "place_members", "valid_widths",
+    "leader_of", "partition_workers", "place_members", "valid_widths",
+    "EXCHANGE_THRESHOLD", "ShardMap", "ShardedScheduler",
     "ALL_POLICY_NAMES", "AdaptivePolicy", "CriticalityAwarePolicy",
     "CriticalityPTTPolicy", "HomogeneousPolicy", "MoldingPolicy",
     "Placement", "Policy", "WeightBasedPolicy", "make_policy",

@@ -56,19 +56,24 @@ DAG_PIN_POLICIES = ("adaptive", "crit-ptt", "homogeneous", "molding:adaptive",
                     "molding:weight", "weight")
 
 
-def dag_pin_trace(policy: str):
-    """The single-DAG reference run for one policy -> its trace."""
+def dag_pin_trace(policy: str, **sim_kwargs):
+    """The single-DAG reference run for one policy -> its trace.
+
+    ``sim_kwargs`` forward to the :class:`~repro.core.simulator.Simulator`
+    constructor — the shard-identity gate re-runs every pin with
+    ``n_shards=1`` through the sharded code path.
+    """
     from .dag_gen import random_dag
     from .places import hikey960
     from .policies import make_policy
     from .simulator import Simulator
 
     dag = random_dag(120, target_degree=3.0, seed=7, width_hint=2)
-    sim = Simulator(hikey960(), make_policy(policy), seed=3)
+    sim = Simulator(hikey960(), make_policy(policy), seed=3, **sim_kwargs)
     return sim.run(dag).trace
 
 
-def workload_pin_trace():
+def workload_pin_trace(**sim_kwargs):
     """The multi-DAG workload reference run -> its trace."""
     from .dag_gen import random_workload
     from .places import fleet
@@ -76,22 +81,24 @@ def workload_pin_trace():
     from .simulator import Simulator
 
     wl = random_workload(n_dags=4, rate=4.0, n_tasks=40, seed=2)
-    sim = Simulator(fleet(12, 4), make_policy("molding:adaptive"), seed=9)
+    sim = Simulator(fleet(12, 4), make_policy("molding:adaptive"), seed=9,
+                    **sim_kwargs)
     return sim.run_workload(wl).trace
 
 
-def serve_pin_trace():
+def serve_pin_trace(**sim_kwargs):
     """The preemptible serving reference run -> its trace."""
     from .places import hikey960
     from .policies import make_policy
     from .serve_orchestrator import bursty_serving_trace, simulate_serving
 
     st = simulate_serving(bursty_serving_trace(seed=1), hikey960(),
-                          make_policy("molding:weight"), seed=1, n_chunks=4)
+                          make_policy("molding:weight"), seed=1, n_chunks=4,
+                          **sim_kwargs)
     return st.result.trace
 
 
-def locality_off_pin_trace():
+def locality_off_pin_trace(**sim_kwargs):
     """The serving reference run with affinity explicitly OFF -> its trace.
 
     Identical config to :func:`serve_pin_trace` but with
@@ -106,24 +113,30 @@ def locality_off_pin_trace():
 
     st = simulate_serving(bursty_serving_trace(seed=1), hikey960(),
                           make_policy("molding:weight"), seed=1, n_chunks=4,
-                          kv_bytes_per_token=0.0)
+                          kv_bytes_per_token=0.0, **sim_kwargs)
     return st.result.trace
 
 
-def all_pin_signatures() -> dict:
-    """Recompute every pinned configuration's signature on the live stack."""
+def all_pin_signatures(**sim_kwargs) -> dict:
+    """Recompute every pinned configuration's signature on the live stack.
+
+    ``sim_kwargs`` forward to every pin's Simulator construction (e.g.
+    ``n_shards=1`` to drive all pins through the sharded scheduler)."""
     out = {}
     for pol in DAG_PIN_POLICIES:
-        out[f"dag.{pol}"] = trace_signature(dag_pin_trace(pol))
-    out["workload.molding:adaptive"] = trace_signature(workload_pin_trace())
-    out["serve.molding:weight"] = trace_signature(serve_pin_trace())
-    out["serve.locality-off"] = trace_signature(locality_off_pin_trace())
+        out[f"dag.{pol}"] = trace_signature(dag_pin_trace(pol, **sim_kwargs))
+    out["workload.molding:adaptive"] = trace_signature(
+        workload_pin_trace(**sim_kwargs))
+    out["serve.molding:weight"] = trace_signature(
+        serve_pin_trace(**sim_kwargs))
+    out["serve.locality-off"] = trace_signature(
+        locality_off_pin_trace(**sim_kwargs))
     return out
 
 
-def check_pins() -> list:
+def check_pins(**sim_kwargs) -> list:
     """-> list of mismatch strings (empty == byte-identity holds)."""
-    live = all_pin_signatures()
+    live = all_pin_signatures(**sim_kwargs)
     return [f"{key}: expected {want}, got {live[key]}"
             for key, want in PINNED_SIGNATURES.items()
             if live[key] != want]

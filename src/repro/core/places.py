@@ -140,6 +140,40 @@ class ClusterSpec:
         return tuple((c, tuple(ws)) for c, ws in runs)
 
 
+def partition_workers(spec: ClusterSpec,
+                      n_shards: int) -> tuple[tuple[int, ...], ...]:
+    """Split the pool into ``n_shards`` disjoint worker groups for the
+    sharded scheduler (`repro.core.shard`).
+
+    Every contiguous class run is sliced proportionally, so each shard
+    stays as heterogeneous as the pool allows (a shard of a big.LITTLE
+    fleet gets both big and LITTLE workers whenever the runs are large
+    enough).  Slices keep global worker ids in ascending order; shards left
+    empty by small runs are topped up from the largest shard, so every
+    shard owns at least one worker.  Deterministic: a pure function of
+    ``(spec, n_shards)``.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > spec.n_workers:
+        raise ValueError(
+            f"n_shards={n_shards} exceeds n_workers={spec.n_workers}")
+    parts: list[list[int]] = [[] for _ in range(n_shards)]
+    for _cls, workers in spec.clusters():
+        q, r = divmod(len(workers), n_shards)
+        lo = 0
+        for s in range(n_shards):
+            hi = lo + q + (1 if s < r else 0)
+            parts[s].extend(workers[lo:hi])
+            lo = hi
+    for s in range(n_shards):
+        if not parts[s]:
+            donor = max(range(n_shards),
+                        key=lambda d: (len(parts[d]), -d))
+            parts[s].append(parts[donor].pop())
+    return tuple(tuple(sorted(p)) for p in parts)
+
+
 def hikey960() -> ClusterSpec:
     """The paper's evaluation platform: 4 LITTLE (A53) + 4 big (A73).
 

@@ -49,6 +49,15 @@ from .ptt import PTT, PTTRegistry
 DAMP_DISPLACEMENTS = 4
 DAMP_MAX_LEVEL = 2
 
+# Inter-shard work-exchange imbalance threshold (docs/POLICIES.md "Exchange
+# threshold").  A worker whose own shard has no stealable work may import a
+# TAO from the most-loaded *other* shard only when the donor's queued
+# backlog exceeds its own shard's by at least this many TAOs:
+# ``qlen[donor] >= qlen[own] + EXCHANGE_THRESHOLD``.  Below the threshold
+# the imbalance is noise-level and the exchange would pay cross-shard data
+# movement (the PR 9 locality cost) for no structural gain.
+EXCHANGE_THRESHOLD = 4
+
 
 @dataclasses.dataclass(frozen=True)
 class Placement:

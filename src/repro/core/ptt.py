@@ -547,6 +547,14 @@ class PTT:
                             dtype=np.float64)
         return blk._t.copy()
 
+    def learned_cells(self) -> int:
+        """Number of tried (worker, width, impl) cells across all variants —
+        the table's learning-progress scalar (benchmarks report it per shard
+        to show how the sharded scheduler partitions profile coverage)."""
+        with self._lock:
+            return int(sum(np.count_nonzero(blk._t)
+                           for blk in self._blocks.values()))
+
 
 class PTTRegistry:
     """``{tao_type: PTT}`` — one table per TAO class, lazily created."""
@@ -598,3 +606,9 @@ class PTTRegistry:
             tables = tuple(self._tables.values())
         for tbl in tables:
             tbl.reset()
+
+    def learned_cells(self) -> int:
+        """Tried cells summed over every table (see :meth:`PTT.learned_cells`)."""
+        with self._lock:
+            tables = tuple(self._tables.values())
+        return sum(tbl.learned_cells() for tbl in tables)

@@ -81,10 +81,11 @@ from collections import deque
 from typing import Any, Callable
 
 from .dag import TAO, TaoDag
-from .places import ClusterSpec, leader_of, place_members
+from .places import ClusterSpec, place_members
 from .policies import Policy
 from .preemption import RunningView, ensure_cursor, sorted_views
 from .scheduler import SchedulerCore
+from .shard import ShardedScheduler
 from .simulator import TraceRecord
 
 
@@ -108,12 +109,14 @@ class _TaoExec:
                  "leader_start")
 
     def __init__(self, tao: TAO, leader: int, width: int, n_workers: int,
-                 dead=(), popper: int | None = None):
+                 dead=(), popper: int | None = None, members=None):
         self.tao = tao
         self.leader = leader
         self.width = width
-        self.members = [m for m in place_members(leader, width)
-                        if m < n_workers and m not in dead]
+        if members is None:
+            members = [m for m in place_members(leader, width)
+                       if m < n_workers]
+        self.members = [m for m in members if m not in dead]
         if not self.members:
             # the whole place died between placement and distribution: the
             # popper (always alive — dead workers never pop) runs it solo
@@ -130,12 +133,35 @@ class _TaoExec:
 
 
 class ThreadedRuntime:
-    """Executes a TAO-DAG on ``spec.n_workers`` threads under ``policy``."""
+    """Executes a TAO-DAG on ``spec.n_workers`` threads under ``policy``.
+
+    ``n_shards=None`` (default) uses the single ``SchedulerCore`` exactly as
+    before.  ``n_shards=k`` partitions the fleet into ``k``
+    :class:`~repro.core.shard.ShardedScheduler` shards, each with its own
+    lock and PTT view; worker threads steal intra-shard first and only
+    cross shards (a counted *work exchange*) when another shard's ready
+    depth exceeds their own by the exchange threshold."""
 
     def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0,
-                 park_timeout_s: float = 0.05):
+                 park_timeout_s: float = 0.05, n_shards: int | None = None,
+                 exchange_threshold: int | None = None):
         self.spec = spec
-        self.core = SchedulerCore(spec, policy, seed=seed)
+        self.n_shards = n_shards
+        if n_shards is None:
+            self.core = SchedulerCore(spec, policy, seed=seed)
+        else:
+            kw = {} if exchange_threshold is None else {
+                "exchange_threshold": exchange_threshold}
+            self.core = ShardedScheduler(spec, policy, n_shards=n_shards,
+                                         seed=seed, **kw)
+        # Approximate per-shard ready-queue depth: the O(1) load signal the
+        # hierarchical steal consults before paying a cross-shard exchange.
+        # Updated under _qlen_lock at every enqueue/pop/drain; "approximate"
+        # because a reader races with concurrent updates — the exchange
+        # threshold absorbs that slack (a stale read can only delay or
+        # trigger one extra exchange, never corrupt a queue).
+        self._qlen = [0] * (n_shards or 1)
+        self._qlen_lock = threading.Lock()
         # Guard timeout for parked workers.  Idle workers no longer
         # sleep-poll: they park on a Condition signalled whenever work is
         # enqueued/distributed (so wake-up latency is a notify, not a poll
@@ -221,6 +247,7 @@ class ThreadedRuntime:
             q.clear()
         for q in self._assembly:
             q.clear()
+        self._qlen = [0] * (self.n_shards or 1)
         self._t0 = time.perf_counter()
 
     def _signal_work(self) -> None:
@@ -256,6 +283,10 @@ class ThreadedRuntime:
                     break
         with self._qlocks[target]:
             self._ready[target].append(tao)
+        if self.n_shards is not None:
+            s = self.core.shard_of_worker[target]
+            with self._qlen_lock:
+                self._qlen[s] += 1
         self._signal_work()
         # preemption consult point 1: a ready TAO may displace running work
         # (consulted after the enqueue so freed workers find it queued).
@@ -399,7 +430,9 @@ class ThreadedRuntime:
     def _dpa_distribute(self, tao: TAO, popper: int) -> None:
         """Dynamic Place Allocation: push into members' assembly queues."""
         width = tao.assigned_width
-        leader = leader_of(popper, width)
+        # sharded cores fold the place into the popper's shard (a place
+        # never spans shards); unsharded this is exactly leader_of()
+        leader = self.core.leader_for(popper, width)
         # the *popper* determines the real place (a steal moves the TAO), so
         # this — not admission — is where the leader becomes truthful; the
         # impl follows the same rule for multi-variant TAOs (re-picked for
@@ -431,7 +464,8 @@ class ThreadedRuntime:
         # consistent for this segment even if a kill lands mid-distribute —
         # a member that dies after assembly drains via the zero-claim exit
         ex = _TaoExec(tao, leader, width, self.spec.n_workers,
-                      dead=tuple(self._dead_workers), popper=popper)
+                      dead=tuple(self._dead_workers), popper=popper,
+                      members=self.core.members_for(leader, width))
         ex.start_time = time.perf_counter()
         if self._preempt is not None:
             with self._run_lock:
@@ -599,8 +633,56 @@ class ThreadedRuntime:
                         tao.footprint, worker, victim)):
                 return False
             dq.popleft()
+        if self.n_shards is not None:
+            s = self.core.shard_of_worker[victim]
+            with self._qlen_lock:
+                self._qlen[s] -= 1
         self._dpa_distribute(tao, popper=worker)
         return True
+
+    def _steal_once(self, worker: int, rng) -> bool:
+        """One steal attempt per scan (paper §5).
+
+        Unsharded: a uniform draw over the other ``n - 1`` workers, as
+        before.  Sharded: hierarchical — the draw stays inside the worker's
+        own shard (locality: no cross-shard queue traffic while the shard
+        has work); only when some other shard's approximate queue depth
+        exceeds this shard's by the exchange threshold does the attempt go
+        cross-shard.  That cross-shard pop is a *work exchange*: counted on
+        the core (conservation-audited) and paying the data-movement cost
+        in ``_dpa_distribute`` for any footprint it migrates."""
+        n = self.spec.n_workers
+        if self.n_shards is None:
+            victim = rng.randrange(n - 1)
+            if victim >= worker:
+                victim += 1
+            return self._try_ready(worker, victim)
+        core = self.core
+        s = core.shard_of_worker[worker]
+        home = core.shards[s].workers
+        if len(home) > 1:
+            li = core.shards[s].local_of[worker]
+            v = rng.randrange(len(home) - 1)
+            if v >= li:
+                v += 1
+            if self._try_ready(worker, home[v]):
+                return True
+        if core.n_shards > 1:
+            with self._qlen_lock:
+                qlen = list(self._qlen)
+            best = qlen[s] + core.exchange_threshold - 1
+            donor = -1
+            for d in range(core.n_shards):
+                if d != s and qlen[d] > best:
+                    best, donor = qlen[d], d
+            if donor >= 0:
+                dw = core.shards[donor].workers
+                victim = dw[rng.randrange(len(dw))]
+                imbalance = qlen[donor] - qlen[s]
+                if self._try_ready(worker, victim):
+                    core.note_exchange(donor, s, imbalance)
+                    return True
+        return False
 
     def _worker_loop(self, worker: int) -> None:
         rng = self._rngs[worker]
@@ -620,17 +702,13 @@ class ThreadedRuntime:
                     # 2) my own ready deque (locality)
                     if self._try_ready(worker, worker):
                         continue
-                    # 3) one random steal attempt, interleaved with the
-                    #    local checks (paper §5) — drawn from the OTHER n-1
-                    #    workers, since stealing from oneself wastes the
-                    #    attempt.  (Stealing FROM a dead worker's deque is
-                    #    allowed: it rescues anything stranded there.)
-                    if n > 1:
-                        victim = rng.randrange(n - 1)
-                        if victim >= worker:
-                            victim += 1
-                        if self._try_ready(worker, victim):
-                            continue
+                    # 3) one steal attempt, interleaved with the local
+                    #    checks (paper §5) — intra-shard first, cross-shard
+                    #    only on threshold imbalance (see _steal_once).
+                    #    (Stealing FROM a dead worker's deque is allowed:
+                    #    it rescues anything stranded there.)
+                    if n > 1 and self._steal_once(worker, rng):
+                        continue
                 # 4) nothing anywhere: park until new work is signalled.
                 #    On wake-up the loop re-runs the local checks before the
                 #    next steal, preserving the paper's one-steal-per-scan
@@ -804,6 +882,10 @@ class ThreadedRuntime:
                         with self._qlocks[w]:
                             stranded = list(self._ready[w])
                             self._ready[w].clear()
+                        if stranded and self.n_shards is not None:
+                            sw = self.core.shard_of_worker[w]
+                            with self._qlen_lock:
+                                self._qlen[sw] -= len(stranded)
                         for tao in stranded:
                             if self._wl_stats is not None:
                                 with self._stats_lock:
@@ -891,7 +973,7 @@ class ThreadedRuntime:
             elapsed = 0.0
         n = self.spec.n_workers
         completed = self.core.completed
-        return WorkloadResult(
+        result = WorkloadResult(
             makespan=elapsed,
             throughput=completed / elapsed if elapsed > 0 else 0.0,
             completed=completed,
@@ -899,3 +981,6 @@ class ThreadedRuntime:
             trace=list(self._trace),
             per_dag=stats,
         )
+        if self.n_shards is not None:
+            result.exchanges = self.core.exchange_stats()
+        return result

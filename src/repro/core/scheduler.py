@@ -36,7 +36,7 @@ import threading
 from .admission import LoadSignals
 from .dag import TAO, TaoDag
 from .locality import LocalityTracker
-from .places import ClusterSpec
+from .places import ClusterSpec, leader_of, place_members
 from .policies import Placement, Policy
 from .ptt import PTTRegistry
 
@@ -374,6 +374,25 @@ class SchedulerCore:
         (the vehicles enforce leader discipline)."""
         self.ptt.table(tao.type).record(leader, width, elapsed,
                                         impl=tao.assigned_impl)
+
+    # -- place geometry ---------------------------------------------------------
+    # Thin wrappers over the XiTAO leader formula so both execution vehicles
+    # can ask the *core* for place geometry: a ShardedScheduler (repro.core.
+    # shard) overrides these to translate through shard-local worker ids,
+    # and the vehicles stay oblivious to whether the pool is partitioned.
+    def leader_for(self, popper: int, width: int) -> int:
+        """Leader of the place a pop on ``popper`` anchors."""
+        return leader_of(popper, width)
+
+    def members_for(self, leader: int, width: int) -> list:
+        """Members of the place anchored at ``leader``, clipped to the pool
+        edge (the vehicles' historical behavior for max-width places)."""
+        n = self.spec.n_workers
+        return [m for m in place_members(leader, width) if m < n]
+
+    def learned_cells(self) -> int:
+        """Tried PTT cells across every table (learning-progress scalar)."""
+        return self.ptt.learned_cells()
 
     # -- helpers ----------------------------------------------------------------
     def _clamp_width(self, width: int) -> int:

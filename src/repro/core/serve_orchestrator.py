@@ -257,13 +257,17 @@ def ptt_profiles(core) -> dict:
     from .dag import DEFAULT_IMPL
 
     out: dict[str, dict] = {}
+    # size the scan from the registry's own spec: a ShardedScheduler's
+    # ``ptt`` is shard 0's registry, whose sub-spec can be narrower than
+    # the scheduler-wide spec
+    spec = core.ptt.spec
     for typ in core.ptt.types():
         table = core.ptt.table(typ)
         cells = {}
         for impl in table.impls():
             snap = table.snapshot(impl=impl)
-            for wi, width in enumerate(core.spec.widths):
-                for worker in range(core.spec.n_workers):
+            for wi, width in enumerate(spec.widths):
+                for worker in range(spec.n_workers):
                     t = float(snap[worker, wi])
                     if t > 0.0:
                         key = ((worker, width) if impl == DEFAULT_IMPL
@@ -298,7 +302,8 @@ def simulate_serving(requests, spec: ClusterSpec, policy: Policy,
                      width_hint: int = 1, seed: int = 0,
                      admission=None, preemption=None,
                      n_chunks: int = 1,
-                     kv_bytes_per_token: float = 0.0) -> ServeStats:
+                     kv_bytes_per_token: float = 0.0,
+                     **sim_kwargs) -> ServeStats:
     """Calibrated-model serving of a request trace on the simulator.
 
     ``admission`` / ``preemption`` are the same gate/controller objects the
@@ -306,12 +311,14 @@ def simulate_serving(requests, spec: ClusterSpec, policy: Policy,
     preemptible at chunk granularity.  ``kv_bytes_per_token > 0`` turns on
     KV-cache affinity: decode bursts pin to the cluster that ran their
     prefill and off-resident placements pay the modeled transfer time.
+    Extra ``sim_kwargs`` forward to the Simulator constructor (e.g.
+    ``n_shards`` for sharded scheduling).
     """
     wl, by_dag = build_serving_workload(requests, width_hint=width_hint,
                                         n_chunks=n_chunks,
                                         kv_bytes_per_token=kv_bytes_per_token)
     sim = Simulator(spec, policy, kernel_models=serving_kernel_models(),
-                    seed=seed)
+                    seed=seed, **sim_kwargs)
     res = sim.run_workload(wl, admission=admission, preemption=preemption)
     return _stats_from(res, by_dag, sim.core)
 

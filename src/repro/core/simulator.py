@@ -74,11 +74,14 @@ import random
 from collections import deque
 from typing import Callable
 
+import numpy as np
+
 from .dag import DEFAULT_IMPL, TAO, TaoDag
-from .places import BIG, LITTLE, ClusterSpec, leader_of, place_members
+from .places import BIG, LITTLE, ClusterSpec
 from .policies import Policy
 from .preemption import RunningView, ensure_cursor, sorted_views
 from .scheduler import SchedulerCore
+from .shard import ShardedScheduler
 
 
 # ---------------------------------------------------------------------------
@@ -193,46 +196,65 @@ class _BitSet:
     path schedules *byte-identically* to ``fast_dispatch=False``, which is
     what lets the perf suite assert trace equality instead of similarity.
 
-    Cost: membership updates are single-int bit ops; ``choice`` touches
-    ceil(n/64) machine words (16 at the 1000-worker fleet), all in C.
+    Cost: the mask is a list of 64-bit words, so add / discard / membership
+    are O(1) small-int ops at any fleet size (a single big-int mask pays a
+    full O(n/64)-word copy per *update* — 12.5 KB per ``idle.discard`` at
+    100k workers, and start_tao touches every chosen member); ``choice``
+    walks ceil(n/64) words worst-case, all small-int arithmetic.
     """
 
-    __slots__ = ("_mask", "_count")
+    __slots__ = ("_words", "_count")
 
     def __init__(self, items=()):
-        self._mask = 0
+        self._words: list[int] = []
         self._count = 0
         for v in items:
             self.add(v)
 
+    @classmethod
+    def full(cls, n: int) -> "_BitSet":
+        """The set {0..n-1} in O(n/64).  State is identical to adding each
+        element."""
+        bs = cls()
+        nw, rem = divmod(n, 64)
+        bs._words = [_CHUNK] * nw + ([(1 << rem) - 1] if rem else [])
+        bs._count = n
+        return bs
+
     def add(self, v: int) -> None:
-        bit = 1 << v
-        if not self._mask & bit:
-            self._mask |= bit
+        w = v >> 6
+        words = self._words
+        if w >= len(words):
+            words.extend([0] * (w + 1 - len(words)))
+        bit = 1 << (v & 63)
+        if not words[w] & bit:
+            words[w] |= bit
             self._count += 1
 
     def discard(self, v: int) -> None:
-        bit = 1 << v
-        if self._mask & bit:
-            self._mask &= ~bit
-            self._count -= 1
+        w = v >> 6
+        words = self._words
+        if w < len(words):
+            bit = 1 << (v & 63)
+            if words[w] & bit:
+                words[w] ^= bit
+                self._count -= 1
 
     def choice(self, rng: random.Random) -> int:
         k = rng.randrange(self._count)   # same draw as the seed rng.choice
-        mask, base = self._mask, 0
-        while True:
-            chunk = mask & _CHUNK
+        for i, chunk in enumerate(self._words):
             c = chunk.bit_count()
             if k < c:
                 for _ in range(k):       # clear the k lowest set bits
                     chunk &= chunk - 1
-                return base + (chunk & -chunk).bit_length() - 1
+                return (i << 6) + (chunk & -chunk).bit_length() - 1
             k -= c
-            mask >>= 64
-            base += 64
+        raise AssertionError("unreachable: k < count by construction")
 
     def __contains__(self, v: int) -> bool:
-        return (self._mask >> v) & 1 == 1
+        w = v >> 6
+        words = self._words
+        return w < len(words) and (words[w] >> (v & 63)) & 1 == 1
 
     def __len__(self) -> int:
         return self._count
@@ -301,10 +323,36 @@ class Simulator:
         seed: int = 0,
         fast_dispatch: bool = True,
         fast_query: bool = True,
+        n_shards: int | None = None,
+        exchange_threshold: int | None = None,
+        vectorized: bool = False,
     ):
         self.spec = spec
-        self.core = SchedulerCore(spec, policy, seed=seed,
-                                  fast_query=fast_query)
+        if n_shards is None:
+            # the default path: one SchedulerCore, untouched by sharding
+            self.core = SchedulerCore(spec, policy, seed=seed,
+                                      fast_query=fast_query)
+        else:
+            # sharded scheduling state (repro.core.shard): per-shard ready
+            # bitsets replace the global victim scan, so the slow-dispatch
+            # baseline has no sharded analogue
+            if not fast_dispatch:
+                raise ValueError(
+                    "sharded dispatch requires fast_dispatch=True")
+            kwargs = {}
+            if exchange_threshold is not None:
+                kwargs["exchange_threshold"] = exchange_threshold
+            self.core = ShardedScheduler(spec, policy, n_shards=n_shards,
+                                         seed=seed, fast_query=fast_query,
+                                         **kwargs)
+        self.n_shards = n_shards
+        # vectorized=True switches the event loop's per-worker state
+        # (free_time, speed multipliers) to numpy arrays and water-fills /
+        # rate-caps with array ops — the 100k-worker sweep path.  Float
+        # summation order differs from the scalar loop, so it is NOT
+        # byte-identical (completions and conservation are, timings agree
+        # to float tolerance); the scalar default stays the pinned path.
+        self.vectorized = vectorized
         self.models = kernel_models or paper_kernel_models()
         self._seed = seed
         self.rng = random.Random(seed ^ 0x5EED)
@@ -420,12 +468,31 @@ class Simulator:
         self.core.reset_counters()
         n_workers = self.spec.n_workers
         fast = self.fast_dispatch
+        vec = self.vectorized
+        sharded = self.n_shards is not None
+        if sharded:
+            # per-shard ready bitsets + O(1) queued-TAO counters: the load
+            # signal the hierarchical work exchange thresholds on
+            shard_of_worker = self.core.shard_of_worker
+            n_shards = self.core.n_shards
+            exch_threshold = self.core.exchange_threshold
+            nonempty_s = [_BitSet() for _ in range(n_shards)]
+            qlen = [0] * n_shards
 
-        free_time = [0.0] * n_workers
+        if vec:
+            free_time = np.zeros(n_workers, dtype=np.float64)
+            speed_np = np.asarray(self.speed_mult, dtype=np.float64)
+            cls_names = tuple(dict.fromkeys(self.spec.classes))
+            code_of = {c: i for i, c in enumerate(cls_names)}
+            cls_code = np.array([code_of[c] for c in self.spec.classes])
+        else:
+            free_time = [0.0] * n_workers
+        speed_vecs: dict = {}   # id(model) -> per-worker class-speed vector
         queues = [deque() for _ in range(n_workers)]
         if fast:
-            idle = _BitSet(w for w in range(n_workers)
-                           if w not in self.failed)
+            idle = _BitSet.full(n_workers)
+            for w in self.failed:
+                idle.discard(w)
         else:
             idle = set(range(n_workers)) - self.failed
         # workers whose ready-queue is non-empty (maintained in fast mode so
@@ -502,21 +569,44 @@ class Simulator:
                     n += 1
             return n
 
+        def model_speed(model: KernelModel) -> np.ndarray:
+            """Per-worker class-speed vector for one kernel model (cached;
+            vectorized path only)."""
+            v = speed_vecs.get(id(model))
+            if v is None:
+                v = np.array([model.speed[self.spec.class_of(w)]
+                              for w in range(n_workers)])
+                speed_vecs[id(model)] = v
+            return v
+
         def push_queue(worker: int, tao: TAO) -> None:
             queues[worker].append(tao)
-            if fast:
+            if sharded:
+                s = shard_of_worker[worker]
+                nonempty_s[s].add(worker)
+                qlen[s] += 1
+            elif fast:
                 nonempty.add(worker)
 
         def pop_queue(worker: int) -> TAO:
             tao = queues[worker].popleft()
-            if fast and not queues[worker]:
+            if sharded:
+                s = shard_of_worker[worker]
+                qlen[s] -= 1
+                if not queues[worker]:
+                    nonempty_s[s].discard(worker)
+            elif fast and not queues[worker]:
                 nonempty.discard(worker)
             return tao
 
         def start_tao(tao: TAO, popper: int, t0: float) -> None:
             nonlocal busy_acc, occupied_slots
             width = tao.assigned_width
-            leader = leader_of(popper, width)
+            # the core owns place geometry: a ShardedScheduler anchors the
+            # place inside the popper's shard (shard-local leader formula),
+            # a plain SchedulerCore is the global XiTAO formula — identical
+            # to the historical inline leader_of/place_members
+            leader = self.core.leader_for(popper, width)
             # the popper (possibly a stealer) fixes the real place; admission
             # leaves assigned_leader at -1 so trace consumers never see a
             # leader the steal invalidated
@@ -544,38 +634,10 @@ class Simulator:
                 st_fp = stats.get(tao.dag_id)
                 if st_fp is not None:
                     st_fp.record_locality(fp_hit, fp_moved)
-            members = [m for m in place_members(leader, width)
-                       if m < n_workers and m not in self.failed]
+            members = [m for m in self.core.members_for(leader, width)
+                       if m not in self.failed]
             if not members:
                 members = [popper]
-            # --- effective per-member rates -------------------------------
-            n_conc = concurrent_same(
-                tao.type, frozenset(cluster_of(m) for m in members))
-            rates = {}
-            per_cluster_speed: dict[str, float] = {}
-            for m in members:
-                s = model.speed[cluster_of(m)] * self.speed_mult[m]
-                per_cluster_speed[cluster_of(m)] = per_cluster_speed.get(
-                    cluster_of(m), 0.0) + s
-                rates[m] = s
-            if model.stream and model.bw_cap:
-                # cap aggregate streaming rate per cluster, shared with other
-                # concurrent streaming TAOs touching the cluster
-                for cl, agg in per_cluster_speed.items():
-                    cap = model.bw_cap[cl] / (1 + n_conc)
-                    if agg > cap > 0:
-                        scale = cap / agg
-                        for m in members:
-                            if cluster_of(m) == cl:
-                                rates[m] *= scale
-            cache_factor = 1.0 + model.cache_penalty * n_conc
-            e = model.eff(width)
-            for m in rates:
-                rates[m] = rates[m] * e / cache_factor
-
-            # --- water-filling finish time ---------------------------------
-            joins = {m: max(t0, free_time[m]) for m in members}
-            parts = sorted(members, key=lambda m: joins[m])
             # TAO.work may carry a unit-work multiplier (serving: prompt/gen
             # length; training: microbatch size) — numbers only; other
             # payload types (ChunkedWork etc.) mean "unit work" here.
@@ -589,30 +651,103 @@ class Simulator:
                 work *= cursor.remaining_fraction
             t_end = float("inf")
             chosen: list[int] = []
-            # single incremental prefix-sum pass: the k-candidate loop used
-            # to recompute sum(rates) / sum(rates*joins) from scratch per k
-            # (O(k^2) per TAO start).  Accumulating left-to-right performs
-            # the exact same float additions in the same order, so the
-            # finish times are bit-identical — just O(k).
-            rsum = 0.0
-            rjsum = 0.0
-            for k in range(1, len(parts) + 1):
-                m = parts[k - 1]
-                rsum += rates[m]
-                rjsum += rates[m] * joins[m]
-                if rsum <= 0:
-                    continue
-                cand = (work + rjsum) / rsum
-                # valid if every chosen member joins before cand and the next
-                # member (if any) joins after cand
-                if cand >= joins[m] - 1e-12 and (
-                    k == len(parts) or cand <= joins[parts[k]] + 1e-12
-                ):
-                    t_end = cand
-                    chosen = parts[:k]
-                    break
+            if vec:
+                # --- vectorized rates + water-fill (100k-worker path) ------
+                mem = np.asarray(members, dtype=np.intp)
+                mem_codes = np.unique(cls_code[mem])
+                n_conc = concurrent_same(tao.type, frozenset(
+                    cls_names[c] for c in mem_codes.tolist()))
+                s_a = model_speed(model)[mem] * speed_np[mem]
+                if model.stream and model.bw_cap:
+                    codes = cls_code[mem]
+                    for code in mem_codes.tolist():
+                        cap = model.bw_cap[cls_names[code]] / (1 + n_conc)
+                        msk = codes == code
+                        agg = float(s_a[msk].sum())
+                        if agg > cap > 0:
+                            s_a[msk] *= cap / agg
+                rates_a = s_a * (model.eff(width)
+                                 / (1.0 + model.cache_penalty * n_conc))
+                joins_a = np.maximum(free_time[mem], t0)
+                order = np.argsort(joins_a, kind="stable")
+                js = joins_a[order]
+                rs = rates_a[order]
+                rcum = np.cumsum(rs)
+                rjcum = np.cumsum(rs * js)
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    cand_a = (work + rjcum) / rcum
+                nxt = np.empty_like(js)
+                if len(js) > 1:
+                    nxt[:-1] = js[1:]
+                nxt[-1] = np.inf
+                ok = (rcum > 0) & (cand_a >= js - 1e-12) \
+                    & (cand_a <= nxt + 1e-12)
+                hit_ks = np.flatnonzero(ok)
+                if hit_ks.size:
+                    ki = int(hit_ks[0])
+                    t_end = float(cand_a[ki])
+                    # .tolist() materializes python ints/floats, so nothing
+                    # numpy-typed ever reaches a TraceRecord repr
+                    chosen = mem[order[:ki + 1]].tolist()
+                    chosen_joins = js[:ki + 1]
+                    joins = dict(zip(chosen, chosen_joins.tolist()))
+            else:
+                # --- effective per-member rates (scalar pinned path) -------
+                n_conc = concurrent_same(
+                    tao.type, frozenset(cluster_of(m) for m in members))
+                rates = {}
+                per_cluster_speed: dict[str, float] = {}
+                for m in members:
+                    s = model.speed[cluster_of(m)] * self.speed_mult[m]
+                    per_cluster_speed[cluster_of(m)] = per_cluster_speed.get(
+                        cluster_of(m), 0.0) + s
+                    rates[m] = s
+                if model.stream and model.bw_cap:
+                    # cap aggregate streaming rate per cluster, shared with
+                    # other concurrent streaming TAOs touching the cluster
+                    for cl, agg in per_cluster_speed.items():
+                        cap = model.bw_cap[cl] / (1 + n_conc)
+                        if agg > cap > 0:
+                            scale_s = cap / agg
+                            for m in members:
+                                if cluster_of(m) == cl:
+                                    rates[m] *= scale_s
+                cache_factor = 1.0 + model.cache_penalty * n_conc
+                e = model.eff(width)
+                for m in rates:
+                    rates[m] = rates[m] * e / cache_factor
+
+                # --- water-filling finish time -----------------------------
+                joins = {m: max(t0, free_time[m]) for m in members}
+                parts = sorted(members, key=lambda m: joins[m])
+                # single incremental prefix-sum pass: the k-candidate loop
+                # used to recompute sum(rates) / sum(rates*joins) from
+                # scratch per k (O(k^2) per TAO start).  Accumulating
+                # left-to-right performs the exact same float additions in
+                # the same order, so the finish times are bit-identical —
+                # just O(k).
+                rsum = 0.0
+                rjsum = 0.0
+                for k in range(1, len(parts) + 1):
+                    m = parts[k - 1]
+                    rsum += rates[m]
+                    rjsum += rates[m] * joins[m]
+                    if rsum <= 0:
+                        continue
+                    cand = (work + rjsum) / rsum
+                    # valid if every chosen member joins before cand and the
+                    # next member (if any) joins after cand
+                    if cand >= joins[m] - 1e-12 and (
+                        k == len(parts) or cand <= joins[parts[k]] + 1e-12
+                    ):
+                        t_end = cand
+                        chosen = parts[:k]
+                        break
             if not chosen:  # all rates zero (fully failed place): fallback
                 chosen = [popper]
+                joins = {popper: max(t0, float(free_time[popper]))}
+                if vec:
+                    chosen_joins = np.array([joins[popper]])
                 t_end = t0 + work / max(
                     model.speed[cluster_of(popper)] *
                     max(self.speed_mult[popper], 1e-6), 1e-9)
@@ -621,10 +756,16 @@ class Simulator:
                 # serialized before compute, delaying this segment's finish
                 t_end += move_cost
 
-            for m in chosen:
-                busy_acc += t_end - joins[m]
-                free_time[m] = t_end
-                idle.discard(m)
+            if vec:
+                busy_acc += t_end * len(chosen) - float(chosen_joins.sum())
+                free_time[np.asarray(chosen, dtype=np.intp)] = t_end
+                for m in chosen:
+                    idle.discard(m)
+            else:
+                for m in chosen:
+                    busy_acc += t_end - joins[m]
+                    free_time[m] = t_end
+                    idle.discard(m)
             rec = TraceRecord(tao.id, tao.type, leader, width,
                               t0, t_end, tuple(chosen), dag_id=tao.dag_id,
                               impl=tao.assigned_impl)
@@ -670,12 +811,47 @@ class Simulator:
                 queues[v][0].footprint, worker, v)
 
         def dispatch_from(worker: int, t0: float) -> bool:
-            """Worker tries local pop then one random steal (paper §5)."""
+            """Worker tries local pop then one random steal (paper §5).
+
+            Sharded runs steal hierarchically: the random victim draw is
+            confined to the worker's own shard (with one shard this is the
+            global draw, bit for bit); only when the whole shard is out of
+            work may the worker *import* a TAO from the most-loaded other
+            shard, and only if that donor's queued backlog exceeds its own
+            shard's by the exchange threshold (docs/POLICIES.md) — every
+            crossing is counted (conservation) and pays the locality
+            movement cost at start (the global tracker sees the cross-shard
+            leader as an off-resident placement)."""
             if worker in self.failed:
                 return False
             if queues[worker]:
                 start_tao(pop_queue(worker), worker, t0)
                 return True
+            if sharded:
+                s = shard_of_worker[worker]
+                ne = nonempty_s[s]
+                if ne:
+                    v = ne.choice(self.rng)
+                    if not steal_ok(v, worker):
+                        return False
+                    start_tao(pop_queue(v), worker, t0)
+                    return True
+                if n_shards > 1:
+                    donor = -1
+                    best = qlen[s] + exch_threshold - 1
+                    for d in range(n_shards):
+                        if d != s and qlen[d] > best:
+                            best = qlen[d]
+                            donor = d
+                    if donor >= 0 and nonempty_s[donor]:
+                        v = nonempty_s[donor].choice(self.rng)
+                        if not steal_ok(v, worker):
+                            return False
+                        imbalance = qlen[donor] - qlen[s]
+                        start_tao(pop_queue(v), worker, t0)
+                        self.core.note_exchange(donor, s, imbalance)
+                        return True
+                return False
             if fast:
                 if nonempty:
                     v = nonempty.choice(self.rng)
@@ -763,12 +939,19 @@ class Simulator:
                 q.remove(tao2)
             except ValueError:
                 return False
-            if fast and not q:
+            if sharded:
+                s = shard_of_worker[target]
+                qlen[s] -= 1
+                if not q:
+                    nonempty_s[s].discard(target)
+            elif fast and not q:
                 nonempty.discard(target)
             return True
 
         def enqueue_ready(tao: TAO, waker: int, t0: float) -> None:
-            placement = self.core.admit(tao, waker)
+            enqueue_admitted(tao, self.core.admit(tao, waker), t0)
+
+        def enqueue_admitted(tao: TAO, placement, t0: float) -> None:
             # a dead target would strand the TAO forever (a dead worker
             # never pops, and at the tail no future event triggers a
             # steal): redirect to the next alive worker deterministically.
@@ -821,6 +1004,8 @@ class Simulator:
                     for w in ev.workers:
                         if w < n_workers and w not in self.failed:
                             self.speed_mult[w] = ev.speed
+                    if vec:
+                        speed_np[:] = self.speed_mult
                     continue
                 if ev.action == C_KILL:
                     newly = [w for w in ev.workers
@@ -831,6 +1016,8 @@ class Simulator:
                         self.failed.add(w)
                         self.speed_mult[w] = 0.0
                         idle.discard(w)
+                    if vec:
+                        speed_np[:] = self.speed_mult
                     dead = set(newly)
                     self.core.set_dead(frozenset(self.failed))
                     # 1) truncate running segments that lost a participant:
@@ -878,12 +1065,16 @@ class Simulator:
                     for w in newly:
                         while queues[w]:
                             tao = queues[w].popleft()
+                            if sharded:
+                                qlen[shard_of_worker[w]] -= 1
                             st = stats.get(tao.dag_id)
                             if st is not None:
                                 st.record_failure_requeue()
                             self.core.release(tao, count_displacement=False)
                             requeue.append((tao, w, ()))
-                        if fast:
+                        if sharded:
+                            nonempty_s[shard_of_worker[w]].discard(w)
+                        elif fast:
                             nonempty.discard(w)
                     # 3) re-admit, then let surviving freed members look
                     #    for work (they are not in `idle` yet, so the
@@ -907,6 +1098,8 @@ class Simulator:
                         free_time[w] = max(free_time[w], now)
                         revived.append(w)
                     self.speed_mult[w] = 1.0
+                if vec:
+                    speed_np[:] = self.speed_mult
                 self.core.set_dead(frozenset(self.failed))
                 for w in revived:
                     if not dispatch_from(w, now):
@@ -971,8 +1164,19 @@ class Simulator:
                 if bind is not None:
                     bind(dag)
                 roots = self.core.prepare(dag, dag_id=dag_id)
-                for r in roots:
-                    enqueue_ready(r, waker=0, t0=now)
+                if sharded and len(roots) > 1:
+                    # batched admission: one shard-grouped pass through the
+                    # shard map, then the per-TAO enqueue/idle-pickup steps
+                    # in the original order (byte-identical at one shard —
+                    # core and dispatch RNG streams each keep their internal
+                    # order, and no admission reads dispatch-side state)
+                    placements = self.core.admit_batch(
+                        [(r, 0) for r in roots])
+                    for r, p in zip(roots, placements):
+                        enqueue_admitted(r, p, now)
+                else:
+                    for r in roots:
+                        enqueue_ready(r, waker=0, t0=now)
                 continue
             if kind == PREEMPT:
                 tao, seg = payload
@@ -1074,7 +1278,7 @@ class Simulator:
         completed = self.core.completed
         util = busy_acc / (makespan * max(1, n_workers - len(self.failed))) \
             if makespan > 0 else 0.0
-        return WorkloadResult(
+        result = WorkloadResult(
             makespan=makespan,
             throughput=completed / makespan if makespan > 0 else 0.0,
             completed=completed,
@@ -1082,6 +1286,9 @@ class Simulator:
             trace=trace,
             per_dag=stats,
         )
+        if sharded:
+            result.exchanges = self.core.exchange_stats()
+        return result
 
 
 def run_policy(dag_factory: Callable[[], TaoDag], spec: ClusterSpec,

@@ -333,6 +333,10 @@ class WorkloadResult(SimResult):
     """SimResult + per-DAG latency table for a multi-tenant run."""
 
     per_dag: dict = dataclasses.field(default_factory=dict)  # dag_id -> DagStats
+    # sharded runs only: the ShardedScheduler's exchange ledger
+    # (``ShardedScheduler.exchange_stats()``) — total/in/out per shard and
+    # the peak imbalance seen at an exchange; None on unsharded runs
+    exchanges: dict | None = None
 
     def sojourns(self) -> list[float]:
         return [s.sojourn for s in self.per_dag.values() if s.done]
